@@ -1,0 +1,37 @@
+"""Fig. 5: hierarchical 3-level bitmap beats flat bitmap by 16.7% on the
+worked 3×6 example (exact, instance-level)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import formats as F
+from repro.core.formats import Format, Level
+from repro.core.primitives import Prim
+from repro.core.sparsity import analyze_exact
+
+
+def run() -> None:
+    dims = {"M": 3, "N": 6}
+    # instance: 1 empty row; 2 non-empty rows covering 3 non-empty thirds
+    mask = np.zeros((3, 6), dtype=bool)
+    mask[0, 0] = mask[0, 3] = True      # row 0: thirds {0, 1}
+    mask[1, 4] = True                   # row 1: third {2}
+
+    flat = analyze_exact(F.bitmap(dims), mask, dims)
+    hier_fmt = Format.of(Level(Prim.B, "M", 3), Level(Prim.B, "N", 3),
+                         Level(Prim.B, "N", 2))
+    (hier, dt) = timed(analyze_exact, hier_fmt, mask, dims)
+
+    red = 1.0 - hier.metadata_bits / flat.metadata_bits
+    emit("fig5_flat_bitmap_bits", dt * 1e6, f"{flat.metadata_bits:.0f}")
+    emit("fig5_hier_bitmap_bits", dt * 1e6, f"{hier.metadata_bits:.0f}")
+    emit("fig5_metadata_reduction", dt * 1e6,
+         f"{red * 100:.1f}% (paper: 16.7%)")
+    assert flat.metadata_bits == 18 and hier.metadata_bits == 15, \
+        (flat.metadata_bits, hier.metadata_bits)
+
+
+if __name__ == "__main__":
+    run()

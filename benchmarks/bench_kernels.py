@@ -1,0 +1,43 @@
+"""Pallas kernel micro-bench (interpret mode on CPU — timing here is NOT
+TPU performance; the meaningful derived columns are the HBM-traffic
+compression ratios the kernels realize, which ARE hardware-true)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    n = k = 256
+    x = jnp.asarray(rng.normal(size=(64, n)).astype(np.float32))
+
+    # block-sparse: 25% of 64×64 blocks kept
+    gn, gk = n // 64, k // 64
+    bitmap = rng.random((gn, gk)) < 0.25
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    w *= np.repeat(np.repeat(bitmap, 64, 0), 64, 1)
+    comp = ops.compress_bitmap(w, 64, 64)
+    out, dt = timed(lambda: ops.bitmap_spmm(x, comp, bm=64).block_until_ready())
+    emit("kernel_bitmap_spmm_64x64blocks", dt * 1e6,
+         f"traffic_ratio={comp.compression_ratio:.3f} (dense=1.0)")
+
+    # 2:4 structured
+    wg = rng.normal(size=(n // 4, 4, k)).astype(np.float32)
+    order = np.argsort(-np.abs(wg), axis=1)
+    mask = np.zeros_like(wg, dtype=bool)
+    np.put_along_axis(mask, order[:, :2, :], True, axis=1)
+    w24 = (wg * mask).reshape(n, k)
+    comp24 = ops.compress_nm(w24)
+    out, dt = timed(lambda: ops.nm_spmm(x, comp24, bm=64, bn=128,
+                                        bk=128).block_until_ready())
+    emit("kernel_nm_spmm_2to4", dt * 1e6,
+         f"traffic_ratio={comp24.compression_ratio:.3f} (dense=1.0)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# Fig. 10 activation/weight density pairs.  Sources: [4] (ReLU Strikes
+# Back) — OPT FFN activation sparsity up to 97%, FC1 35–70% sparse, larger
+# models sparser; [5] (SparseLLM) — 70–85% weight sparsity at comparable
+# accuracy.  "act"/"w" are NON-ZERO fractions (density).
+SPARSE_LLM_DENSITIES = {
+    "LLaMA2-7B": {"act": 0.40, "w": 0.20, "fc2_act": 0.15},
+    "LLaMA2-13B": {"act": 0.35, "w": 0.15, "fc2_act": 0.10},
+    "OPT-6.7B": {"act": 0.20, "w": 0.15, "fc2_act": 0.05},
+    "OPT-13B": {"act": 0.15, "w": 0.12, "fc2_act": 0.04},
+    "OPT-30B": {"act": 0.10, "w": 0.10, "fc2_act": 0.03},
+}

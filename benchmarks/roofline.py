@@ -1,0 +1,106 @@
+"""§Roofline: three-term roofline per (arch × shape) from dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / 197e12          (TPU v5e bf16 peak)
+  memory     = HLO_bytes_per_device / 819e9           (HBM bandwidth)
+  collective = collective_bytes_per_device / 50e9     (ICI per-link)
+
+All inputs are PER-DEVICE post-SPMD numbers from the trip-count-aware HLO
+analyzer (launch/hlo_cost.py), single-pod mesh.  MODEL_FLOPS uses 6·N·D for
+training (N = params; active params for MoE), 2·N·D for prefill, 2·N·B for
+one decode step (+ attention KV terms are part of HLO, not MODEL_FLOPS —
+the ratio deliberately exposes attention/remat/dispatch overhead).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [artifacts/dryrun]
+Writes artifacts/roofline.json + prints the markdown table.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token × batch
+    "long_500k": 1,
+}
+TRAIN_MULT = {"train_4k": 6.0, "prefill_32k": 2.0,
+              "decode_32k": 2.0, "long_500k": 2.0}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["active_params"]
+    return TRAIN_MULT[rec["shape"]] * n * SHAPE_TOKENS[rec["shape"]]
+
+
+def advise(rec: dict, dom: str) -> str:
+    shape, arch = rec["shape"], rec["arch"]
+    if dom == "collective":
+        return ("overlap/reshard: move DP all-reduce off the critical path "
+                "or shrink TP traffic (wo/w_down reduce-scatter)")
+    if dom == "memory":
+        if "decode" in shape or "500k" in shape:
+            return "KV/state cache traffic dominates: shrink dtype, shard S"
+        return "activation traffic: bigger fused blocks / less remat refetch"
+    ratio = rec.get("useful_ratio", 0)
+    if ratio and ratio < 0.5:
+        return "compute-bound but wasteful: cut remat recompute / attention overhead"
+    return "compute-bound near useful peak: increase per-chip batch if HBM allows"
+
+
+def build(art_dir: str) -> list[dict]:
+    rows = []
+    for fname in sorted(os.listdir(art_dir)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(art_dir, fname)) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != "single" or rec.get("skipped") \
+                or not rec.get("ok") or rec.get("opts"):
+            continue        # baseline table: single-pod, un-optimized cells
+        t_c = rec["flops"] / PEAK_FLOPS
+        t_m = rec["hlo_bytes"] / HBM_BW
+        t_x = rec["coll_bytes"] / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops(rec)
+        hlo_global = rec["flops"] * rec["devices"]
+        useful = mf / hlo_global if hlo_global else 0.0
+        # roofline fraction: useful model flops per device vs the time the
+        # dominant term implies
+        t_dom = max(t_c, t_m, t_x)
+        frac = (mf / rec["devices"] / PEAK_FLOPS) / t_dom if t_dom else 0.0
+        row = dict(arch=rec["arch"], shape=rec["shape"],
+                   compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                   dominant=dom, model_flops=mf, hlo_flops_global=hlo_global,
+                   useful_ratio=useful, roofline_frac=frac)
+        row["advice"] = advise({**rec, **row}, dom)
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    rows = build(art_dir)
+    out = os.path.join(os.path.dirname(art_dir), "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL/HLO | roofline frac | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+              f"{r['roofline_frac']:.2f} | {r['advice']} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline terms come from the
+dry-run artifacts (benchmarks/roofline.py builds the table; run
+``python -m repro.launch.dryrun --all`` first for that one).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_dimo, bench_energy_validation,
+                            bench_fig5_payload, bench_fig6_penalty,
+                            bench_format_opt, bench_formats_feasibility,
+                            bench_kernels, bench_multimodel, bench_speed)
+    suites = [
+        ("fig5", bench_fig5_payload.run),
+        ("fig6", bench_fig6_penalty.run),
+        ("fig8/9", bench_energy_validation.run),
+        ("fig10", bench_format_opt.run),
+        ("fig11", bench_multimodel.run),
+        ("tableI", bench_speed.run),
+        ("dimo", bench_dimo.run),
+        ("feasibility", bench_formats_feasibility.run),
+        ("kernels", bench_kernels.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if only and only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED")
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.perf_counter()-t0:.1f}s",
+              flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""The full codesign loop, end to end:
+
+  1. take a dense FFN weight from a real architecture config;
+  2. prune it (block-sparse for the bitmap path, 2:4 for the N:M path);
+  3. run SnipSnap's DSE against the TPUv5e hardware model to pick the
+     compression format + block shape;
+  4. compress the weights into that format;
+  5. execute the matmul through the matching Pallas kernel (interpret mode
+     on CPU) and check it against the dense reference.
+
+  PYTHONPATH=src python examples/codesign_pipeline.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.codesign import plan_for_model
+from repro.core.cosearch import CoSearchConfig
+from repro.core.engine import EngineConfig
+from repro.core.sparsity import NM, Bernoulli
+from repro.kernels import ops
+from repro.sparse import masks
+
+
+def main() -> None:
+    cfg = get_config("deepseek-coder-33b").reduced()
+    rng = np.random.default_rng(0)
+    d, f = cfg.d_model, cfg.d_ff
+    w = jnp.asarray(rng.normal(size=(d, f)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(32, d)).astype(np.float32))
+
+    # ---- path A: unstructured→block sparsity + bitmap kernel -------------
+    density = 0.2
+    plan = plan_for_model(cfg, Bernoulli(density), tokens=256,
+                          search_cfg=CoSearchConfig(
+                              engine=EngineConfig(max_levels=3,
+                                                  max_allocs_per_pattern=24),
+                              spatial_top=2, max_pairs=8))
+    ch = plan.for_op("ffn.up")
+    print(f"[plan] ffn.up → kernel={ch.kind} block=({ch.block_n},{ch.block_k})"
+          f" predicted_ratio={ch.predicted_ratio:.3f}")
+    print(f"       format: {ch.format_str}")
+    if ch.kind == "bitmap":
+        bn = max(8, min(ch.block_n, 32))
+        bk = max(8, min(ch.block_k, 32))
+        wb = masks.block_prune(w, bn, bk, density)
+        comp = ops.compress_bitmap(np.asarray(wb), bn, bk)
+        y = ops.bitmap_spmm(x, comp, bm=32)
+        ref = jnp.dot(x, wb)
+        err = float(jnp.max(jnp.abs(y - ref)))
+        print(f"[exec] bitmap_spmm blocks={comp.blocks.shape} "
+              f"traffic_ratio={comp.compression_ratio:.3f} max_err={err:.2e}")
+
+    # ---- path B: 2:4 structured + N:M kernel ------------------------------
+    plan24 = plan_for_model(cfg, NM(2, 4), tokens=256,
+                            search_cfg=CoSearchConfig(
+                                engine=EngineConfig(max_levels=2,
+                                                    max_allocs_per_pattern=8),
+                                spatial_top=2, max_pairs=4))
+    ch24 = plan24.for_op("ffn.up")
+    print(f"[plan] 2:4 → kernel={ch24.kind} ratio={ch24.predicted_ratio:.3f}")
+    w24 = masks.nm_prune(w)
+    comp24 = ops.compress_nm(np.asarray(w24))
+    y24 = ops.nm_spmm(x, comp24, bm=32, bn=min(128, d), bk=min(128, f))
+    err24 = float(jnp.max(jnp.abs(y24 - jnp.dot(x, w24))))
+    print(f"[exec] nm_spmm values={comp24.values.shape} "
+          f"traffic_ratio={comp24.compression_ratio:.3f} max_err={err24:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: run SnipSnap's joint format+dataflow co-search on a sparse
+OPT-125M and print the chosen design.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.arch import ARCH3
+from repro.core.cosearch import CoSearchConfig, cosearch
+from repro.core.engine import EngineConfig
+from repro.core.formats import STANDARD_BASELINES
+from repro.core.workload import OPT_125M, build_llm
+
+
+def main() -> None:
+    # OPT-125M, 256-token prefill + 32-token decode, ReLU-sparse FFN acts
+    # + SparseLLM-grade pruned weights
+    wl = build_llm(OPT_125M, seq=256, decode_tokens=32,
+                   act_density=0.35, w_density=0.15, fc2_act_density=0.05)
+
+    cfg = CoSearchConfig(objective="edp",
+                         engine=EngineConfig(max_levels=3),
+                         max_pairs=10)
+    print(f"[snipsnap] co-searching {wl.name}: {len(wl.ops)} ops on {ARCH3.name}")
+    res = cosearch(wl, ARCH3, cfg)
+    d = res.design
+    print(f"  explored {res.evaluations} design points in {res.runtime_s:.2f}s")
+    print(f"  activation format: {d.pattern_i}")
+    print(f"  weight     format: {d.pattern_w}")
+    print(f"  energy={d.energy:.3e}  cycles={d.cycles:.3e}  EDP={d.edp:.3e}")
+    print("  per-op dataflows:")
+    for od in d.ops[:4]:
+        print(f"    {od.op.name:14s} {od.mapping}")
+
+    # compare against the four fixed baselines
+    print("  baselines (memory energy, normalized to SnipSnap):")
+    for fmt in STANDARD_BASELINES:
+        r = cosearch(wl, ARCH3, cfg, fixed_formats=(fmt, fmt))
+        print(f"    {fmt:7s} {r.design.memory_energy / d.memory_energy:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

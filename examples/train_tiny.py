@@ -1,0 +1,22 @@
+"""End-to-end training: a reduced deepseek-family model for a few hundred
+steps on CPU, with checkpoints, resume, and fault-tolerant stepping.
+
+  PYTHONPATH=src python examples/train_tiny.py
+"""
+
+import subprocess
+import sys
+
+
+def main() -> None:
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "deepseek-coder-33b", "--reduced",
+           "--steps", "200", "--batch", "8", "--seq", "128",
+           "--ckpt-dir", "/tmp/repro_train_tiny", "--ckpt-every", "100",
+           "--log-every", "20", "--resume"]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Sharded numpy checkpointing: atomic, step-tagged, resumable, elastic.
+
+Layout:  <dir>/step_<N>/
+            meta.json            — step, pytree structure, shard map
+            shard_<host>.npz     — this host's param/opt leaves
+         <dir>/LATEST            — atomic pointer (tmp + rename)
+
+No tensorstore dependency; each host writes only its own leaves (here: one
+host).  Restore works onto a DIFFERENT mesh shape — arrays are saved
+unsharded per-leaf and re-sharded by the caller's pjit in_shardings, which
+is what makes elastic restart (§runtime) possible.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, host_id: int = 0,
+         extra: Optional[dict] = None) -> str:
+    """Write a checkpoint; returns its directory.  Atomic via tmp+rename."""
+    leaves, treedef = _flatten(tree)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_ckpt_")
+    try:
+        np.savez(os.path.join(tmp, f"shard_{host_id}.npz"),
+                 **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        meta = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef), "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(step_dir):
+            shutil.rmtree(step_dir)
+        os.rename(tmp, step_dir)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(step_dir))
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like: PyTree, step: Optional[int] = None,
+            host_id: int = 0) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shapes must match).
+    Returns (tree, extra).  ``step=None`` → latest."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(step_dir, f"shard_{host_id}.npz"))
+    leaves, treedef = jax.tree.flatten(like)
+    assert meta["n_leaves"] == len(leaves), \
+        f"checkpoint has {meta['n_leaves']} leaves, expected {len(leaves)}"
+    restored = []
+    for i, ref_leaf in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert arr.shape == tuple(ref_leaf.shape), \
+            f"leaf {i}: ckpt {arr.shape} != model {ref_leaf.shape}"
+        restored.append(arr.astype(ref_leaf.dtype))
+    return jax.tree.unflatten(treedef, restored), meta.get("extra", {})
+
+
+def prune_old(ckpt_dir: str, keep: int = 3) -> None:
+    """Garbage-collect old checkpoints, keeping the newest ``keep``."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

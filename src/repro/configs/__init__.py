@@ -1,0 +1,5 @@
+from repro.configs.base import (ModelConfig, MoECfg, SSMCfg, HybridCfg,
+                                ShapeCfg, SHAPES, get_config, list_archs)
+
+__all__ = ["ModelConfig", "MoECfg", "SSMCfg", "HybridCfg", "ShapeCfg",
+           "SHAPES", "get_config", "list_archs"]

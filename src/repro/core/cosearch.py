@@ -1,0 +1,348 @@
+"""Progressive co-search workflow (paper §III-D, Fig. 7 right).
+
+Interleaves dataflow and compression-format exploration in a single forward
+pass, with no post-hoc correction loops:
+
+  1. the Sparsity Analyzer models the computation-reduction strategy UPFRONT
+     (effective MAC/cycle fractions shrink temporal bounds before any
+     dataflow is generated);
+  2. compression patterns are generated (adaptive engine, penalty-pruned);
+  3. per pattern, loop ordering/tiling candidates are enumerated with
+     COMPRESSION-AWARE legality (compressed tile sizes → more tilings legal,
+     none invalidated later);
+  4. the dimension allocation is derived from each candidate mapping
+     (efficiency-oriented allocating), and the evaluator scores the joint
+     (format, mapping) point.
+
+One compression pattern is selected per operand role for the whole workload
+(hardware ships a single format decoder); dimension allocations follow each
+operator's own tiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional, Sequence
+
+from repro.core.arch import HardwareConfig
+from repro.core.costmodel import (CompiledFormat, CostReport, compile_format,
+                                  dense_format, evaluate, memory_energy)
+from repro.core.dataflow import Mapping, enumerate_mappings
+from repro.core.engine import (Candidate, EngineConfig, SearchStats,
+                               allocate_for_mapping, generate_candidates)
+from repro.core.formats import Format, Level, standard_formats
+from repro.core.primitives import Prim
+from repro.core.sparsity import TensorSpec
+from repro.core.workload import MatMul, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class CoSearchConfig:
+    objective: str = "edp"             # "energy" | "latency" | "edp"
+    engine: EngineConfig = EngineConfig()
+    spatial_top: int = 3
+    max_pairs: int = 12                # (fmt_i, fmt_w) combos evaluated
+    compress_threshold: float = 0.999  # only compress operands sparser than this
+
+
+@dataclasses.dataclass
+class OpDesign:
+    op: MatMul
+    mapping: Mapping
+    fmt_i: Optional[Format]
+    fmt_w: Optional[Format]
+    cost: CostReport
+
+
+@dataclasses.dataclass
+class DesignPoint:
+    ops: list[OpDesign]
+    pattern_i: Optional[tuple]
+    pattern_w: Optional[tuple]
+
+    @property
+    def energy(self) -> float:
+        return sum(o.cost.energy for o in self.ops)
+
+    @property
+    def cycles(self) -> float:
+        return sum(o.cost.cycles for o in self.ops)
+
+    @property
+    def edp(self) -> float:
+        return self.energy * self.cycles
+
+    @property
+    def memory_energy(self) -> float:
+        return sum(memory_energy(o.cost) for o in self.ops)
+
+    def metric(self, objective: str) -> float:
+        return {"energy": self.energy, "latency": self.cycles,
+                "edp": self.edp}[objective]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    design: DesignPoint
+    evaluations: int
+    runtime_s: float
+    stats: SearchStats
+
+
+# ---------------------------------------------------------------------------
+
+def _representative_spec(workload: Workload, role: str) -> TensorSpec:
+    """The largest sparse tensor of the role drives pattern generation."""
+    best, best_sz = None, -1.0
+    for op in workload.ops:
+        dims = op.i_dims() if role == "I" else op.w_dims()
+        sp = op.sp_i if role == "I" else op.sp_w
+        sz = float(op.M) * op.N if role == "I" else float(op.N) * op.K
+        if sp.density < 1.0 and sz > best_sz:
+            best, best_sz = TensorSpec(dims, sp, op.value_bits), sz
+    if best is None:
+        # dense role — no compression candidates
+        op = workload.ops[0]
+        dims = op.i_dims() if role == "I" else op.w_dims()
+        sp = op.sp_i if role == "I" else op.sp_w
+        best = TensorSpec(dims, sp, op.value_bits)
+    return best
+
+
+def _role_candidates(workload: Workload, role: str, cfg: CoSearchConfig,
+                     stats: SearchStats) -> list[Optional[Candidate]]:
+    spec = _representative_spec(workload, role)
+    if spec.sparsity.density > cfg.compress_threshold:
+        return [None]                   # dense operand: store uncompressed
+    cands = generate_candidates(spec, cfg.engine, stats=stats)
+    side = max(2, int(math.isqrt(cfg.max_pairs)) + 1)
+    return list(cands[:side]) + [None]
+
+
+def _op_format(cand: Optional[Candidate], pattern_dims: dict[str, int],
+               mapping: Mapping, spec: TensorSpec) -> Optional[CompiledFormat]:
+    """Instantiate the candidate pattern on one op via mapping-derived
+    allocation (efficiency-oriented allocating); standard named formats are
+    instantiated directly (their layout IS their identity)."""
+    if cand is None:
+        return None
+    if cand.fmt.name in ("Bitmap", "RLE", "CSR", "CSC", "COO"):
+        return compile_format(standard_formats(spec.dims)[cand.fmt.name], spec)
+    # strip sizes & dense head from the reference format; keep dense-leaf
+    # block factors (relative block shape travels with the pattern)
+    bare = tuple(Level(l.prim, l.dim, None) for l in cand.fmt.levels
+                 if l.prim is not Prim.NONE)
+    pattern_dims_set = {l.dim for l in bare}
+    leaf = {l.dim: int(l.size) for l in cand.fmt.levels
+            if l.prim is Prim.NONE and l.dim in pattern_dims_set
+            and l.size is not None}
+    fmt = allocate_for_mapping(bare, spec.dims, spec.dims, mapping, leaf=leaf)
+    if fmt is None:
+        return None
+    return compile_format(fmt, spec)
+
+
+def _reference_cf(cand: Optional[Candidate], spec: TensorSpec
+                  ) -> Optional[CompiledFormat]:
+    """Best SIZE-optimal allocation of the candidate's pattern on this op's
+    dims (the engine's reference view, independent of the mapping)."""
+    if cand is None:
+        return None
+    if cand.fmt.name in ("Bitmap", "RLE", "CSR", "CSC", "COO"):
+        return compile_format(standard_formats(spec.dims)[cand.fmt.name], spec)
+    from repro.core.formats import allocate
+    from repro.core.sparsity import analyze
+    bare = tuple(Level(l.prim, l.dim, None) for l in cand.fmt.levels
+                 if l.prim is not Prim.NONE)
+    best_fmt, best_bits = None, math.inf
+    for fmt in allocate(bare, spec.dims, max_allocs=24):
+        bits = analyze(fmt, spec).total_bits
+        if bits < best_bits:
+            best_fmt, best_bits = fmt, bits
+    return compile_format(best_fmt, spec) if best_fmt else None
+
+
+def output_cf(cand_i: Optional[Candidate], op: MatMul
+              ) -> Optional[CompiledFormat]:
+    """Output-activation writeback format: the I-side (activation) decoder
+    re-used on O's dims (positional rename N→K) — O is the next operator's
+    sparse input and leaves the chip compressed (SCNN-style)."""
+    if cand_i is None or op.sp_o.density >= 0.999:
+        return None
+    spec_o = TensorSpec(op.o_dims(), op.sp_o, op.value_bits)
+    if cand_i.fmt.name in ("Bitmap", "RLE", "CSR", "CSC", "COO"):
+        return compile_format(standard_formats(spec_o.dims)[cand_i.fmt.name],
+                              spec_o)
+    rename = {"N": "K"}
+    bare = tuple(Level(l.prim, rename.get(l.dim, l.dim), None)
+                 for l in cand_i.fmt.levels if l.prim is not Prim.NONE)
+    renamed = Candidate(Format(bare), cand_i.report, cand_i.eq_data)
+    return _reference_cf(renamed, spec_o)
+
+
+def _search_op(op: MatMul, arch: HardwareConfig,
+               cand_i: Optional[Candidate], cand_w: Optional[Candidate],
+               cfg: CoSearchConfig) -> tuple[Optional[OpDesign], int]:
+    """Best (mapping, allocation) for one op under a fixed pattern pair.
+
+    Two allocations compete per mapping: the mapping-DERIVED one
+    (efficiency-oriented allocating — perfectly aligned, possibly larger)
+    and the SIZE-optimal reference (smaller, alignment-penalized by the
+    cost model).  The evaluator arbitrates, which is exactly the paper's
+    co-design argument made operational."""
+    spec_i = TensorSpec(op.i_dims(), op.sp_i, op.value_bits)
+    spec_w = TensorSpec(op.w_dims(), op.sp_w, op.value_bits)
+
+    evals = 0
+    best: Optional[OpDesign] = None
+    dense_i = dense_format(spec_i)
+    dense_w = dense_format(spec_w)
+    ref_i = _reference_cf(cand_i, spec_i) or dense_i
+    ref_w = _reference_cf(cand_w, spec_w) or dense_w
+    cf_o = output_cf(cand_i, op)
+    # compression-aware legality from THIS op's reference formats
+    ratio_i = min(ref_i.ratio, 1.0)
+    ratio_w = min(ref_w.ratio, 1.0)
+    # standard named formats have a fixed layout — the reference IS the
+    # only allocation, so mapping-derived variants would be duplicates
+    named = ("Bitmap", "RLE", "CSR", "CSC", "COO")
+    fixed_i = cand_i is not None and cand_i.fmt.name in named
+    fixed_w = cand_w is not None and cand_w.fmt.name in named
+    for mapping in enumerate_mappings(op, arch, ratio_i, ratio_w,
+                                      spatial_top=cfg.spatial_top):
+        map_i = ref_i if fixed_i else \
+            (_op_format(cand_i, op.i_dims(), mapping, spec_i) or ref_i)
+        map_w = ref_w if fixed_w else \
+            (_op_format(cand_w, op.w_dims(), mapping, spec_w) or ref_w)
+        variants = {(id(map_i), id(map_w)): (map_i, map_w),
+                    (id(ref_i), id(ref_w)): (ref_i, ref_w)}
+        for cf_i, cf_w in variants.values():
+            cost = evaluate(op, arch, mapping, cf_i, cf_w, cf_o)
+            evals += 1
+            if best is None or cost.metric(cfg.objective) < best.cost.metric(cfg.objective):
+                best = OpDesign(op, mapping, cf_i.fmt, cf_w.fmt, cost)
+    return best, evals
+
+
+def _fixed_candidate(fmt_name: str, spec: TensorSpec) -> Optional[Candidate]:
+    if fmt_name in (None, "dense", "Dense"):
+        return None
+    fmt = standard_formats(spec.dims)[fmt_name]
+    from repro.core.sparsity import analyze
+    rep = analyze(fmt, spec)
+    return Candidate(fmt, rep, rep.total_bits)
+
+
+def cosearch(workload: Workload, arch: HardwareConfig,
+             cfg: CoSearchConfig = CoSearchConfig(),
+             fixed_formats: Optional[tuple[Optional[str], Optional[str]]] = None,
+             ) -> SearchResult:
+    """Joint dataflow + compression-format search for one workload.
+
+    ``fixed_formats=(name_i, name_w)`` runs the Table-I "Fixed" mode: the
+    format is preset (one of Bitmap/RLE/CSR/COO or None=dense) and only the
+    dataflow is searched — still with the progressive workflow's upfront
+    reduction + compression-aware allocation.
+    """
+    t0 = time.perf_counter()
+    stats = SearchStats()
+
+    if fixed_formats is not None:
+        spec_i = _representative_spec(workload, "I")
+        spec_w = _representative_spec(workload, "W")
+        pairs: list[tuple[Optional[Candidate], Optional[Candidate]]] = [(
+            _fixed_candidate(fixed_formats[0], spec_i),
+            _fixed_candidate(fixed_formats[1], spec_w),
+        )]
+    else:
+        cands_i = _role_candidates(workload, "I", cfg, stats)
+        cands_w = _role_candidates(workload, "W", cfg, stats)
+        pairs = [(ci, cw) for ci in cands_i for cw in cands_w]
+        # rank pairs by combined reference EqData and cap
+        pairs.sort(key=lambda p: (p[0].eq_data if p[0] else math.inf / 4) +
+                                 (p[1].eq_data if p[1] else math.inf / 4))
+        # always keep the fully-dense pair as a fallback
+        dense_pair = (None, None)
+        pairs = pairs[: cfg.max_pairs]
+        if dense_pair not in pairs:
+            pairs.append(dense_pair)
+
+    evals = 0
+    best_design: Optional[DesignPoint] = None
+    for ci, cw in pairs:
+        ops: list[OpDesign] = []
+        ok = True
+        for op in workload.ops:
+            od, e = _search_op(op, arch, ci, cw, cfg)
+            evals += e
+            if od is None:
+                ok = False
+                break
+            ops.append(od)
+        if not ok:
+            continue
+        dp = DesignPoint(ops,
+                         ci.pattern if ci else None,
+                         cw.pattern if cw else None)
+        if best_design is None or dp.metric(cfg.objective) < best_design.metric(cfg.objective):
+            best_design = dp
+    assert best_design is not None, "search produced no legal design"
+    return SearchResult(best_design, evals, time.perf_counter() - t0, stats)
+
+
+# ---------------------------------------------------------------------------
+# Multi-model co-search with importance scoring (§III-C3)
+# ---------------------------------------------------------------------------
+
+def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
+                   importance: dict[str, float],
+                   cfg: CoSearchConfig = CoSearchConfig(),
+                   ) -> tuple[dict[str, SearchResult], tuple, float]:
+    """Pick ONE shared format pair across models minimizing the importance-
+    weighted objective.  Returns (per-model results under the winning pair,
+    winning pattern pair, weighted metric)."""
+    stats = SearchStats()
+    # union of candidate patterns over models, keyed by pattern pair
+    pair_keys: dict[tuple, tuple[Optional[Candidate], Optional[Candidate]]] = {}
+    for wl in workloads:
+        for ci in _role_candidates(wl, "I", cfg, stats):
+            for cw in _role_candidates(wl, "W", cfg, stats):
+                key = (ci.pattern if ci else None, cw.pattern if cw else None)
+                pair_keys.setdefault(key, (ci, cw))
+
+    table: dict[str, dict[tuple, float]] = {wl.name: {} for wl in workloads}
+    designs: dict[tuple, dict[str, SearchResult]] = {}
+    items = sorted(pair_keys.items(),
+                   key=lambda kv: (kv[1][0].eq_data if kv[1][0] else math.inf / 4)
+                   + (kv[1][1].eq_data if kv[1][1] else math.inf / 4))
+    for key, (ci, cw) in items[: cfg.max_pairs]:
+        designs[key] = {}
+        for wl in workloads:
+            t0 = time.perf_counter()
+            evals = 0
+            ops = []
+            for op in wl.ops:
+                od, e = _search_op(op, arch, ci, cw, cfg)
+                evals += e
+                if od is None:
+                    break
+                ops.append(od)
+            if len(ops) != len(wl.ops):
+                continue
+            dp = DesignPoint(ops, ci.pattern if ci else None,
+                             cw.pattern if cw else None)
+            designs[key][wl.name] = SearchResult(
+                dp, evals, time.perf_counter() - t0, stats)
+            table[wl.name][key] = dp.metric(cfg.objective)
+
+    complete = [k for k in designs if len(designs[k]) == len(workloads)]
+    best_key, best_val = None, math.inf
+    for k in complete:
+        val = sum(importance.get(wl.name, 1.0) * table[wl.name][k]
+                  for wl in workloads)
+        if val < best_val:
+            best_key, best_val = k, val
+    assert best_key is not None
+    return designs[best_key], best_key, best_val

@@ -1,0 +1,262 @@
+"""Cost Model (paper §III-A Evaluator, right half).
+
+Evaluates a design candidate = (MatMul op, hardware, Mapping, compression
+formats for I and W) into energy / latency / EDP, "modeling MAC operations
+and memory transfers".  The Sparsity Analyzer supplies compressed sizes and
+computation-reduction fractions; this module turns them into per-level
+access counts and cycles.
+
+Alignment between format and dataflow (§III-C2, efficiency-oriented
+allocating) is modeled physically:
+  * a level whose block extent ``b`` exceeds the tile extent ``t`` along its
+    dim forces over-fetch (whole compression groups move, factor b/t);
+  * a tile that straddles group boundaries re-decodes the boundary groups
+    (factor ceil(t/b)/(t/b));
+  * RLE has no random access — a tile fetch decodes the whole run-chain
+    spanned by the sequential region (granule rule).
+When the dimension allocation copies the dataflow's tiling factors, every
+factor collapses to 1.0 — exactly the paper's "aligns the compression format
+with the dataflow, reducing runtime overhead".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.arch import HardwareConfig
+from repro.core.dataflow import Mapping, irrelevant_refetch
+from repro.core.formats import Format
+from repro.core.primitives import DECODE_COST, Prim
+from repro.core.sparsity import SizeReport, TensorSpec, analyze
+from repro.core.workload import MatMul
+
+
+@dataclasses.dataclass(frozen=True)
+class _LevelInfo:
+    dim: str
+    block_below: int          # elements along `dim` under one position
+    meta_bits: float
+    decode_ops: float
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledFormat:
+    """(format × tensor) analysis, pre-chewed for the mapping hot loop."""
+
+    fmt: Optional[Format]               # None = stored dense
+    dense_bits: float
+    payload_bits: float
+    levels: tuple[_LevelInfo, ...]
+    payload_granule: dict[str, int]     # smallest fetchable payload block per
+    #                                     dim (innermost compressed level's
+    #                                     block, or RLE sequential span)
+
+    @property
+    def total_bits(self) -> float:
+        return self.payload_bits + sum(l.meta_bits for l in self.levels)
+
+    @property
+    def ratio(self) -> float:
+        return self.total_bits / self.dense_bits
+
+    def _align(self, b: int, t: int) -> float:
+        if b > t:
+            return b / t
+        whole = t / b
+        return math.ceil(whole) / whole
+
+    def fetched_bits(self, tile: dict[str, int]) -> float:
+        """Bits moved per full pass over the tensor, tile-at-a-time."""
+        if self.fmt is None:
+            return self.dense_bits
+        pay = self.payload_bits
+        for d, g in self.payload_granule.items():
+            if g > 1 and d in tile:
+                pay *= self._align(g, tile[d])
+        meta = sum(l.meta_bits * self._align(l.block_below, tile.get(l.dim, l.block_below))
+                   for l in self.levels)
+        return pay + meta
+
+    def decode_ops(self, tile: dict[str, int]) -> float:
+        if self.fmt is None:
+            return 0.0
+        return sum(l.decode_ops * self._align(l.block_below, tile.get(l.dim, l.block_below))
+                   for l in self.levels)
+
+
+def compile_format(fmt: Optional[Format], spec: TensorSpec) -> CompiledFormat:
+    if fmt is None:
+        return CompiledFormat(None, spec.dense_bits, spec.dense_bits, (), {})
+    report: SizeReport = analyze(fmt, spec)
+    infos: list[_LevelInfo] = []
+    below: dict[str, int] = dict.fromkeys(spec.dims, 1)
+    # block_below per level = product of sizes of INNER levels on the same dim
+    sizes_per_dim: dict[str, list[int]] = {}
+    for l in fmt.levels:
+        sizes_per_dim.setdefault(l.dim, []).append(int(l.size))  # type: ignore[arg-type]
+    seen: dict[str, int] = dict.fromkeys(spec.dims, 0)
+    for i, l in enumerate(fmt.levels):
+        seq = sizes_per_dim[l.dim]
+        idx = seen[l.dim]
+        blk = 1
+        for s in seq[idx + 1:]:
+            blk *= s
+        seen[l.dim] += 1
+        infos.append(_LevelInfo(l.dim, blk, report.per_level[i],
+                                DECODE_COST[l.prim] * report.per_level[i]))
+    # Payload granule per dim: payload is stored per position of the
+    # innermost COMPRESSED level, so fetches move whole such blocks.  RLE has
+    # no random access — its sequential span is the level extent times
+    # everything below it.
+    gran: dict[str, int] = {}
+    rle_span: dict[str, int] = {}
+    for i, l in enumerate(fmt.levels):
+        if l.prim is Prim.NONE:
+            continue
+        # innermost compressed level wins: walking outer→inner, overwrite
+        gran[l.dim] = infos[i].block_below
+        if l.prim is Prim.RLE:
+            span = int(l.size) * infos[i].block_below  # type: ignore[arg-type]
+            rle_span[l.dim] = max(rle_span.get(l.dim, 1), span)
+    for d, span in rle_span.items():
+        gran[d] = max(gran.get(d, 1), span)
+    return CompiledFormat(fmt, spec.dense_bits, report.payload_bits,
+                          tuple(infos), gran)
+
+
+def dense_format(spec: TensorSpec) -> CompiledFormat:
+    return compile_format(None, spec)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    energy: float               # normalized pJ
+    cycles: float
+    edp: float
+    breakdown: dict[str, float]
+    utilization: float
+    dram_bits: float
+
+    def metric(self, objective: str) -> float:
+        return {"energy": self.energy, "latency": self.cycles,
+                "edp": self.edp}[objective]
+
+
+def evaluate(op: MatMul, arch: HardwareConfig, mapping: Mapping,
+             cf_i: CompiledFormat, cf_w: CompiledFormat,
+             cf_o: Optional[CompiledFormat] = None) -> CostReport:
+    """Cost of running ``op`` with ``mapping`` and the given formats.
+
+    ``cf_o``: format for the OUTPUT activation writeback (SCNN-style — the
+    output is the next operator's sparse input and leaves the chip
+    compressed).  Partial sums still move in wide precision."""
+    vb = op.value_bits
+    rho_i = op.sp_i.density
+    rho_w = op.sp_w.density
+    mac_frac = arch.reduc.mac_fraction(rho_i, rho_w)
+    cyc_frac = arch.reduc.cycle_fraction(rho_i, rho_w)
+
+    macs_dense = float(op.M) * op.N * op.K
+    bounds = mapping.bounds(op)
+    tile, sp, order = mapping.tile, mapping.spatial, mapping.order
+
+    # --- DRAM traffic (tile-reuse rule + format fetch model) ---------------
+    f_i = irrelevant_refetch(order, "I", bounds)
+    f_w = irrelevant_refetch(order, "W", bounds)
+    f_o = irrelevant_refetch(order, "O", bounds)
+    o_elems = float(op.M) * op.K
+    o_tile = {"M": tile["M"], "K": tile["K"]}
+    o_final = (cf_o.fetched_bits(o_tile) if cf_o is not None
+               else o_elems * vb)                 # compressed writeback
+    # intermediate partial sums (when the reduction is split across tiles)
+    # move in wide precision: (f_o − 1) write+read round trips
+    o_bits = 2.0 * (f_o - 1.0) * o_elems * 2 * vb + o_final
+    # Conditional fetch under skipping: a W stripe is fetched only if SOME
+    # input element pairing it inside the tile is non-zero (decisive during
+    # decode, M=1: zero activations skip whole weight rows — Deja-Vu-style);
+    # symmetrically for I under weight checking.
+    w_fetch = 1.0
+    i_fetch = 1.0
+    if arch.reduc.kind == "skipping":
+        if arch.reduc.check_i:
+            w_fetch = op.sp_i.prob_nonempty(tile["M"])
+        if arch.reduc.check_w:
+            i_fetch = op.sp_w.prob_nonempty(tile["K"])
+    dram_bits = (cf_i.fetched_bits(tile) * f_i * i_fetch +
+                 cf_w.fetched_bits(tile) * f_w * w_fetch +
+                 o_bits)
+
+    # --- GLB traffic: per-MAC operand streams with spatial + RF reuse ------
+    # I is shared across the K-unrolled PEs, W across M-unrolled, O partial
+    # sums reduce across N-unrolled; each fetched word is further reused
+    # ~rf_reuse times from the register file.  Compressed operands stream
+    # fewer bits (data stays compressed in GLB — SCNN-style).  Skipping
+    # additionally suppresses the PARTNER operand's reads: a W word whose
+    # paired I is zero is never fetched (and vice versa).
+    rr = arch.rf_reuse
+    skip = arch.reduc.kind == "skipping"
+    i_partner = rho_w if (skip and arch.reduc.check_w) else 1.0
+    w_partner = rho_i if (skip and arch.reduc.check_i) else 1.0
+    glb_bits = (macs_dense * vb / (sp["K"] * rr) * min(cf_i.ratio, 1.0)
+                * i_partner +
+                macs_dense * vb / (sp["M"] * rr) * min(cf_w.ratio, 1.0)
+                * w_partner +
+                macs_dense * 2 * vb * mac_frac / (sp["N"] * rr *
+                                                  max(tile["N"] // sp["N"], 1))
+                + o_bits)
+
+    # --- RF + MAC ----------------------------------------------------------
+    rf_bits = macs_dense * mac_frac * 3 * vb
+    mac_energy = macs_dense * mac_frac * arch.mac_pj
+
+    # --- metadata decode (charged per DRAM stream) --------------------------
+    decode = (cf_i.decode_ops(tile) * f_i + cf_w.decode_ops(tile) * f_w)
+    decode_energy = decode * arch.decode_pj_per_op
+
+    e_dram = dram_bits * arch.dram.pj_per_bit
+    e_glb = glb_bits * arch.glb.pj_per_bit
+    e_rf = rf_bits * arch.rf.pj_per_bit
+    energy = e_dram + e_glb + e_rf + mac_energy + decode_energy
+
+    # --- latency ------------------------------------------------------------
+    n_tiles = bounds["M"] * bounds["N"] * bounds["K"]
+    per_tile_cycles = (math.ceil(tile["M"] / sp["M"]) *
+                       math.ceil(tile["N"] / sp["N"]) *
+                       math.ceil(tile["K"] / sp["K"]))
+    compute_cycles = n_tiles * per_tile_cycles * cyc_frac
+    dram_cycles = dram_bits / arch.dram.bw_bits_per_cycle
+    glb_cycles = glb_bits / arch.glb.bw_bits_per_cycle
+    cycles = max(compute_cycles, dram_cycles, glb_cycles, 1.0)
+
+    util = macs_dense * cyc_frac / (max(compute_cycles, 1.0) * arch.macs)
+    cnt = op.count
+    energy *= cnt
+    cycles *= cnt
+    return CostReport(
+        energy=energy,
+        cycles=cycles,
+        edp=energy * cycles,
+        breakdown={
+            "dram": e_dram * cnt, "glb": e_glb * cnt, "rf": e_rf * cnt,
+            "mac": mac_energy * cnt, "decode": decode_energy * cnt,
+            "dram_cycles": dram_cycles * cnt,
+            "compute_cycles": compute_cycles * cnt,
+        },
+        utilization=min(util, 1.0),
+        dram_bits=dram_bits * cnt,
+    )
+
+
+def memory_energy(report: CostReport) -> float:
+    """The paper's 'memory energy' metric: DRAM + on-chip buffer traffic —
+    the data movement compression formats actually change.  RF accesses are
+    part of the PE datapath (3/MAC regardless of format) and are accounted
+    with compute, following Eyeriss/SCNN's energy taxonomy."""
+    b = report.breakdown
+    return b["dram"] + b["glb"]

@@ -1,0 +1,263 @@
+"""Adaptive Compression Engine (paper §III-C).
+
+Generates candidate compression formats for tensors with varying sparsity via
+three techniques:
+
+  1. *Complexity-based penalizing* — ``EqData = γ^level × ActualData`` with
+     γ = 1.05 by default; during pattern search, a pattern is pruned when its
+     (lower-bounded or realized) EqData cannot beat the best strictly-simpler
+     pattern.  This collapses the >4×10⁵-point space of Fig. 6 to a handful
+     of 2–3-level candidates within a fraction of a percent of the optimum.
+
+  2. *Efficiency-oriented allocating* — subdimension sizes are copied from
+     the dataflow's loop-tiling hierarchy so compression groups coincide with
+     tiles (zero alignment overhead in the cost model).
+
+  3. *Importance-based scoring* — multi-LLM deployments select one shared
+     format by ``argmin_fmt Σ ImpScore_i × OptMetric_i``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional, Sequence
+
+from repro.core import formats as F
+from repro.core.dataflow import Mapping
+from repro.core.formats import Format, Level
+from repro.core.primitives import Prim
+from repro.core.sparsity import SizeReport, Sparsity, TensorSpec, analyze
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    gamma: float = 1.05            # complexity penalty base (configurable)
+    max_levels: int = 3            # pattern depth cap (paper finds 2–3 wins)
+    top_k: int = 8                 # candidates handed to the co-search
+    max_allocs_per_pattern: int = 64
+    prims: tuple[Prim, ...] = (Prim.B, Prim.CP, Prim.RLE, Prim.UOP)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    fmt: Format                    # pattern with a reference allocation
+    report: SizeReport
+    eq_data: float                 # γ^levels × total bits
+
+    @property
+    def pattern(self) -> tuple:
+        return self.fmt.pattern_key()
+
+
+@dataclasses.dataclass
+class SearchStats:
+    patterns_seen: int = 0
+    allocations_seen: int = 0
+    pruned_patterns: int = 0
+
+
+def eq_data(total_bits: float, levels: int, gamma: float) -> float:
+    """Equivalent data size (§III-C1): penalize deep patterns."""
+    return (gamma ** levels) * total_bits
+
+
+def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
+                        penalize: bool = True,
+                        stats: Optional[SearchStats] = None,
+                        ) -> list[Candidate]:
+    """Enumerate patterns by iterative deepening with complexity pruning.
+
+    Level-(n+1) patterns are built by extending level-n patterns; with
+    ``penalize=True`` only patterns whose EqData beats the best strictly
+    simpler pattern survive — excluded patterns are neither kept nor
+    extended, which is what collapses the Fig. 6 search space.  With
+    ``penalize=False`` every prefix is extended (the "w/o penalizing"
+    series).  Returns the top-k candidates by EqData, each carrying its best
+    reference allocation.
+    """
+    stats = stats if stats is not None else SearchStats()
+    dims = list(spec.dims)
+
+    def score(pattern: tuple[Level, ...], bar: float) -> Optional[Candidate]:
+        """Best allocation for a pattern.  Allocations are formats too: when
+        penalizing, stop early once the pattern evidently cannot beat the
+        simpler-format bar (the same exclusion rule, applied in-pattern)."""
+        best_alloc: Optional[Candidate] = None
+        since_improve = 0
+        for i, fmt in enumerate(F.allocate(pattern, spec.dims,
+                                           max_allocs=cfg.max_allocs_per_pattern)):
+            stats.allocations_seen += 1
+            rep = analyze(fmt, spec)
+            e = eq_data(rep.total_bits, len(pattern), cfg.gamma)
+            if best_alloc is None or e < best_alloc.eq_data:
+                best_alloc = Candidate(fmt, rep, e)
+                since_improve = 0
+            else:
+                since_improve += 1
+            if math.isfinite(bar):
+                if i >= 15 and best_alloc.eq_data >= bar:
+                    break              # evidently dominated by simpler formats
+                if since_improve >= 24:
+                    break              # allocation landscape has flattened
+        return best_alloc
+
+    out: list[Candidate] = []
+    frontier: list[tuple[Level, ...]] = [()]
+    best_simpler = math.inf            # best EqData among shallower levels
+    for n in range(1, cfg.max_levels + 1):
+        level_best = math.inf
+        next_frontier: list[tuple[Level, ...]] = []
+        for base in frontier:
+            for d in dims:
+                for prim in cfg.prims:
+                    pattern = base + (Level(prim, d),)
+                    stats.patterns_seen += 1
+                    if prim is Prim.UOP:
+                        # UOP at the leaf is unscoreable (nothing to offset
+                        # into) but extending it can win (CSR/CSC prefixes):
+                        # inherit survival from the base pattern.
+                        next_frontier.append(pattern)
+                        continue
+                    cand = score(pattern, best_simpler if penalize else math.inf)
+                    if cand is None:
+                        stats.pruned_patterns += 1
+                        continue
+                    if penalize and cand.eq_data >= best_simpler:
+                        stats.pruned_patterns += 1
+                        continue
+                    level_best = min(level_best, cand.eq_data)
+                    out.append(cand)
+                    next_frontier.append(pattern)
+        frontier = next_frontier
+        best_simpler = min(best_simpler, level_best)
+
+    out.sort(key=lambda c: c.eq_data)
+    return out[: cfg.top_k]
+
+
+# ---------------------------------------------------------------------------
+# Efficiency-oriented allocating (§III-C2)
+# ---------------------------------------------------------------------------
+
+def _split_chain(extent: int, mapping_chain: Sequence[int], parts: int
+                 ) -> Optional[tuple[int, ...]]:
+    """Split ``extent`` into ``parts`` factors following the dataflow's
+    tiling hierarchy ``mapping_chain`` (outer→inner extents, product ==
+    extent).  If the chain has more stages than parts, inner stages merge;
+    if fewer, fall back to balanced factor splits."""
+    chain = [c for c in mapping_chain if c > 1]
+    if len(chain) >= parts:
+        merged = list(chain[: parts - 1])
+        tail = 1
+        for c in chain[parts - 1:]:
+            tail *= c
+        merged.append(tail)
+        if math.prod(merged) == extent and all(c > 1 for c in merged):
+            return tuple(merged)
+    # fallback: balanced split (prefer near-equal factors > 1)
+    best: Optional[tuple[int, ...]] = None
+    for fac in F.factorizations(extent, parts):
+        if any(f <= 1 for f in fac):
+            continue
+        spread = max(fac) / min(fac)
+        if best is None or spread < max(best) / min(best):
+            best = fac
+    return best
+
+
+def _divide_out(chain: Sequence[int], leaf: int) -> Optional[list[int]]:
+    """Remove a factor ``leaf`` from the inner end of a tiling chain."""
+    out = list(chain)
+    rem = leaf
+    for i in range(len(out) - 1, -1, -1):
+        g = math.gcd(out[i], rem)
+        out[i] //= g
+        rem //= g
+        if rem == 1:
+            break
+    if rem != 1:
+        return None
+    return [c for c in out if c > 1]
+
+
+def allocate_for_mapping(pattern: Sequence[Level], dims: dict[str, int],
+                         op_extents: dict[str, int], mapping: Mapping,
+                         leaf: Optional[dict[str, int]] = None,
+                         ) -> Optional[Format]:
+    """Derive the dimension allocation from the dataflow (§III-C2).
+
+    For each dim the loop hierarchy is (#DRAM tiles, tile/spatial, spatial);
+    format levels take sizes outer→inner from that chain — e.g. with M=8
+    outer and M=32 inner loops, ``B(M1)-B(M2)`` becomes ``B(M1,8)-B(M2,32)``.
+    ``leaf`` optionally reserves an innermost dense-block factor per dim
+    (block-sparse formats); it is divided out of the chain's inner stages.
+    """
+    leaf = leaf or {}
+    per_dim_slots: dict[str, int] = {}
+    for l in pattern:
+        per_dim_slots[l.dim] = per_dim_slots.get(l.dim, 0) + 1
+
+    chains: dict[str, tuple[int, ...]] = {}
+    for d, parts in per_dim_slots.items():
+        extent = dims[d]
+        lf = leaf.get(d, 1)
+        if lf > 1 and extent % lf:
+            return None
+        target = extent // lf
+        if target == 1 or (parts > 1 and target < 2 ** parts):
+            return None
+        t = mapping.tile.get(d, extent)
+        u = mapping.spatial.get(d, 1)
+        chain: list[int] = []
+        if t and extent % t == 0:
+            chain = [extent // t, max(t // u, 1), u]
+            if lf > 1:
+                chain = _divide_out(chain, lf) or []
+        split = _split_chain(target, chain, parts)
+        if split is None:
+            return None
+        chains[d] = split
+
+    used = dict.fromkeys(per_dim_slots, 0)
+    levels: list[Level] = []
+    for l in pattern:
+        idx = used[l.dim]
+        levels.append(l.with_size(chains[l.dim][idx]))
+        used[l.dim] += 1
+    head = tuple(Level(Prim.NONE, d, dims[d]) for d in dims
+                 if d not in per_dim_slots)
+    leaves = tuple(Level(Prim.NONE, d, lf) for d, lf in leaf.items()
+                   if lf > 1 and d in per_dim_slots)
+    fmt = Format(head + tuple(levels) + leaves)
+    try:
+        fmt.validate(dims)
+    except ValueError:
+        return None
+    return fmt
+
+
+# ---------------------------------------------------------------------------
+# Importance-based scoring (§III-C3)
+# ---------------------------------------------------------------------------
+
+def select_shared(metric_by_model_by_format: dict[str, dict[str, float]],
+                  importance: dict[str, float]) -> tuple[str, float]:
+    """argmin_fmt Σ_i ImpScore(LLM_i) × OptMetric(LLM_i, fmt).
+
+    ``metric_by_model_by_format[model][format_key]`` must be complete over a
+    shared format-key set.  Returns (format_key, weighted metric)."""
+    fmt_keys = None
+    for model, table in metric_by_model_by_format.items():
+        keys = set(table)
+        fmt_keys = keys if fmt_keys is None else (fmt_keys & keys)
+    if not fmt_keys:
+        raise ValueError("no common format across models")
+    best_key, best_val = None, math.inf
+    for k in sorted(fmt_keys):
+        val = sum(importance.get(m, 1.0) * table[k]
+                  for m, table in metric_by_model_by_format.items())
+        if val < best_val:
+            best_key, best_val = k, val
+    assert best_key is not None
+    return best_key, best_val

@@ -1,0 +1,312 @@
+"""Sparsity Analyzer (paper §III-A Evaluator, left half).
+
+Estimates compressed data sizes and computation reduction using statistical
+expectations.  Two entry points:
+
+  * :func:`analyze`        — expectation model over a sparsity distribution
+                             (the fast path used inside the search loop);
+  * :func:`analyze_exact`  — exact bit counts for a concrete binary mask
+                             (oracle for tests and for the Fig. 5 example).
+
+Both walk the format's fiber tree outer→inner, tracking how many units are
+*stored* at each level (compressed primitives prune empty children; ``None``
+levels keep everything) and summing per-primitive metadata bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.formats import Format
+from repro.core.primitives import (DECODE_COST, LevelStats, Prim, clog2,
+                                   keeps_only_nonempty, metadata_bits)
+
+
+# ---------------------------------------------------------------------------
+# Sparsity distributions
+# ---------------------------------------------------------------------------
+
+class Sparsity:
+    """Base class: a statistical model of where zeros fall in a tensor."""
+
+    density: float
+
+    def prob_nonempty(self, block_elems: float) -> float:
+        raise NotImplementedError
+
+    def expected_nnz(self, block_elems: float) -> float:
+        return self.density * block_elems
+
+
+@dataclasses.dataclass(frozen=True)
+class Bernoulli(Sparsity):
+    """I.i.d. zeros with the given density of non-zeros (paper's default
+    statistical-expectation model for unstructured sparsity)."""
+
+    density: float
+
+    def prob_nonempty(self, block_elems: float) -> float:
+        if self.density <= 0.0:
+            return 0.0
+        if self.density >= 1.0:
+            return 1.0
+        return 1.0 - (1.0 - self.density) ** block_elems
+
+
+@dataclasses.dataclass(frozen=True)
+class NM(Sparsity):
+    """N:M structured sparsity: exactly ``n`` non-zeros per ``m`` consecutive
+    elements along the innermost dimension (e.g. 2:4)."""
+
+    n: int
+    m: int
+
+    @property
+    def density(self) -> float:  # type: ignore[override]
+        return self.n / self.m
+
+    def prob_nonempty(self, block_elems: float) -> float:
+        c = block_elems
+        if c >= self.m:
+            return 1.0  # every m-group carries n>=1 non-zeros
+        # Probability that a sub-group window of c elements is all-zero:
+        # hypergeometric — choose positions of the (m-n) zeros.
+        c = int(c)
+        num = math.comb(self.m - self.n, c) if c <= self.m - self.n else 0
+        return 1.0 - num / math.comb(self.m, c)
+
+
+DENSE = Bernoulli(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Tensor spec + size report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """A named-dimension tensor with a sparsity model."""
+
+    dims: dict[str, int]               # ordered, e.g. {"M": 4096, "N": 4096}
+    sparsity: Sparsity = DENSE
+    value_bits: int = 16               # bf16/int16 payload by default
+
+    @property
+    def elems(self) -> int:
+        out = 1
+        for v in self.dims.values():
+            out *= v
+        return out
+
+    @property
+    def dense_bits(self) -> float:
+        return float(self.elems * self.value_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeReport:
+    """Compressed-size analysis for (format, tensor)."""
+
+    payload_bits: float
+    metadata_bits: float
+    decode_ops: float                  # metadata-processing work (cost model)
+    per_level: tuple[float, ...]       # metadata bits per level
+
+    @property
+    def total_bits(self) -> float:
+        return self.payload_bits + self.metadata_bits
+
+
+# ---------------------------------------------------------------------------
+# Expectation model
+# ---------------------------------------------------------------------------
+
+def analyze(fmt: Format, spec: TensorSpec) -> SizeReport:
+    """Expected compressed size of ``spec`` under ``fmt``.
+
+    Walk levels outer→inner.  Invariants maintained:
+      stored   — expected number of stored units entering level i
+                 (the level's parents);
+      covered  — elements covered by ONE unit at the parent level.
+    """
+    fmt.validate(spec.dims)
+    sp = spec.sparsity
+
+    # elements covered by one position at each level = product of inner sizes
+    sizes = [int(l.size) for l in fmt.levels]  # type: ignore[arg-type]
+    inner = [1] * (len(sizes) + 1)
+    for i in range(len(sizes) - 1, -1, -1):
+        inner[i] = inner[i + 1] * sizes[i]
+    # inner[i] = elements covered by one unit at level i (levels 1-indexed via i-1)
+
+    stored = 1.0
+    dense_positions = 1.0
+    meta: list[float] = []
+    decode = 0.0
+    for i, level in enumerate(fmt.levels):
+        s = sizes[i]
+        c_child = inner[i + 1]          # elements under one child position
+        p_child = sp.prob_nonempty(c_child)
+        dense_positions *= s
+        # Expected non-empty positions at this level is the GLOBAL dense
+        # count × p (linearity of expectation) — every non-empty position
+        # necessarily lies under a non-empty (hence stored) parent, so this
+        # is exactly the number of children materialized below compressed
+        # parents, regardless of pruning decisions above.
+        total_positions = stored * s
+        nonempty = dense_positions * p_child
+        st = LevelStats(
+            stored_parents=stored,
+            fanout=s,
+            nonempty_positions=nonempty,
+            child_nnz=sp.expected_nnz(inner[i]),
+        )
+        bits = metadata_bits(level.prim, st)
+        meta.append(bits)
+        decode += DECODE_COST[level.prim] * bits
+        stored = nonempty if keeps_only_nonempty(level.prim) else total_positions
+
+    payload = stored * spec.value_bits  # leaf units cover exactly 1 element
+    return SizeReport(payload_bits=payload,
+                      metadata_bits=float(sum(meta)),
+                      decode_ops=decode,
+                      per_level=tuple(meta))
+
+
+# ---------------------------------------------------------------------------
+# Exact model (concrete mask)
+# ---------------------------------------------------------------------------
+
+def analyze_exact(fmt: Format, mask: np.ndarray, dims: dict[str, int],
+                  value_bits: int = 16) -> SizeReport:
+    """Exact bit counts of ``fmt`` applied to a concrete 0/1 ``mask``.
+
+    ``mask`` axes must follow ``dims`` order.  The mask is reshaped so its
+    axes match the level order (splitting repeated dims into subdims), then
+    the fiber tree is walked with boolean occupancy arrays.
+    """
+    fmt.validate(dims)
+    if tuple(mask.shape) != tuple(dims.values()):
+        raise ValueError(f"mask shape {mask.shape} != dims {dims}")
+    mask = mask.astype(bool)
+
+    # Split each dim axis into its per-level sizes (outer→inner for that dim),
+    # then transpose so axes follow the global level order.
+    dim_names = list(dims)
+    split_shapes: list[list[int]] = []
+    level_axis: list[tuple[int, int]] = []   # per level: (dim_index, split_slot)
+    slot_count = {d: 0 for d in dim_names}
+    per_dim_sizes: dict[str, list[int]] = {d: [] for d in dim_names}
+    for l in fmt.levels:
+        per_dim_sizes[l.dim].append(int(l.size))  # type: ignore[arg-type]
+        level_axis.append((dim_names.index(l.dim), slot_count[l.dim]))
+        slot_count[l.dim] += 1
+    for d in dim_names:
+        split_shapes.append(per_dim_sizes[d] if per_dim_sizes[d] else [dims[d]])
+
+    new_shape: list[int] = []
+    axis_of: dict[tuple[int, int], int] = {}
+    for di, shp in enumerate(split_shapes):
+        for si, s in enumerate(shp):
+            axis_of[(di, si)] = len(new_shape)
+            new_shape.append(s)
+    arr = mask.reshape(new_shape)
+    perm = [axis_of[key] for key in level_axis]
+    # any dims without levels were given a single implicit axis already in
+    # split_shapes — formats from allocate() always carry a dense tail, so
+    # every dim has at least one level after validate(); perm covers all axes.
+    arr = np.transpose(arr, perm)
+
+    n = len(fmt.levels)
+    nonempty = [np.any(arr, axis=tuple(range(i + 1, n))) if i + 1 < n else arr
+                for i in range(n)]
+    # nonempty[i] has shape sizes[:i+1]; True where the unit holds any nnz.
+
+    stored_parent = np.ones((), dtype=bool)   # level-0 root
+    meta: list[float] = []
+    decode = 0.0
+    for i, level in enumerate(fmt.levels):
+        s = int(level.size)  # type: ignore[arg-type]
+        parents = float(np.sum(stored_parent))
+        ne_mask = nonempty[i] & stored_parent[..., None]
+        ne = float(np.sum(ne_mask))
+        if level.prim is Prim.B:
+            bits = parents * s
+        elif level.prim is Prim.CP:
+            bits = ne * clog2(s)
+        elif level.prim is Prim.RLE:
+            bits = ne * clog2(s + 1)
+        elif level.prim is Prim.UOP:
+            # field width: max non-zero count under any stored parent
+            axes = tuple(range(i, arr.ndim))
+            child_nnz = np.sum(arr, axis=axes) * stored_parent
+            width = clog2(float(np.max(child_nnz)) + 1.0)
+            bits = parents * (s + 1) * width
+        else:  # NONE / CUSTOM-dense
+            bits = 0.0
+        meta.append(bits)
+        decode += DECODE_COST[level.prim] * bits
+        stored_parent = ne_mask if keeps_only_nonempty(level.prim) \
+            else np.broadcast_to(stored_parent[..., None],
+                                 stored_parent.shape + (s,)).copy()
+
+    payload = float(np.sum(stored_parent)) * value_bits
+    return SizeReport(payload_bits=payload,
+                      metadata_bits=float(sum(meta)),
+                      decode_ops=decode,
+                      per_level=tuple(meta))
+
+
+# ---------------------------------------------------------------------------
+# Computation reduction (paper §II-B2): gating / skipping, uni/bidirectional
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ComputeReduction:
+    """One of the five strategies: none, {gating,skipping} × {→, ←, ↔}.
+
+    ``check_i``/``check_w`` state which operand's zeros are detected; the
+    checked operands' densities multiply into the effective MAC fraction.
+    ``skipping`` saves cycles as well as energy; gating saves energy only.
+    """
+
+    kind: str = "none"                 # "none" | "gating" | "skipping"
+    check_i: bool = False
+    check_w: bool = False
+
+    def mac_fraction(self, rho_i: float, rho_w: float) -> float:
+        if self.kind == "none":
+            return 1.0
+        f = 1.0
+        if self.check_i:
+            f *= rho_i
+        if self.check_w:
+            f *= rho_w
+        return f
+
+    def cycle_fraction(self, rho_i: float, rho_w: float) -> float:
+        """Upfront estimate of temporal loop-bound shrinkage (§III-D1)."""
+        if self.kind == "skipping":
+            return self.mac_fraction(rho_i, rho_w)
+        return 1.0
+
+    def label(self) -> str:
+        if self.kind == "none":
+            return "none"
+        arrow = {"10": "I→W", "01": "W→I", "11": "I↔W"}[
+            f"{int(self.check_i)}{int(self.check_w)}"]
+        return f"{self.kind} {arrow}"
+
+
+NO_REDUCTION = ComputeReduction()
+
+
+def reduction(kind: str, direction: str) -> ComputeReduction:
+    """Factory: direction in {'I', 'W', 'IW'} = which operands are checked."""
+    return ComputeReduction(kind=kind,
+                            check_i="I" in direction,
+                            check_w="W" in direction)

@@ -1,0 +1,83 @@
+"""Block-bitmap compressed matmul — Pallas TPU kernel.
+
+Executes SnipSnap's TPU-native hierarchical format
+``B(N₁)-B(K₁)-None(N₂,K₂)``: a bitmap over the (N/bn, K/bk) block grid with
+dense MXU-aligned payload blocks, stored COMPRESSED (only non-zero blocks
+travel HBM→VMEM).  The bitmap is pre-decoded on the host into CSC-style
+scalar-prefetch metadata (per-block-column counts / offsets / row ids), so
+the kernel's grid walks exactly the non-zero blocks — the TPU analogue of
+"Skipping I←W" at block granularity (DESIGN.md §4).
+
+Grid: (M/bm, K/bk, T) with T = max non-zero blocks in any block-column.
+The accumulator tile Y[mi, kj] stays resident in VMEM across the T axis
+(innermost grid dim revisits the same output block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(counts_ref, offs_ref, rows_ref, x_ref, w_ref, y_ref):
+    kj = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(t < counts_ref[kj])
+    def _acc():
+        y_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                              preferred_element_type=jnp.float32)
+
+
+def bitmap_spmm_pallas(x: jax.Array, blocks: jax.Array, counts: jax.Array,
+                       row_ids: jax.Array, offsets: jax.Array,
+                       *, k: int, bm: int = 128, interpret: bool = False
+                       ) -> jax.Array:
+    """x: (M, N) dense; blocks: (nnzb, bn, bk) compressed payload;
+    counts/offsets: (K/bk,) per-block-column metadata; row_ids: (nnzb,).
+    Returns Y = X @ W_sparse, (M, K) float32.
+    """
+    m, n = x.shape
+    nnzb, bn, bk = blocks.shape
+    gk = k // bk
+    t_max = 1 if nnzb == 0 else int(counts.max()) if hasattr(counts, "max") \
+        and not isinstance(counts, jax.core.Tracer) else nnzb
+    # static grid bound: tightest statically-known T
+    t_max = max(int(t_max), 1)
+    bm = min(bm, m)
+    grid = (m // bm, gk, t_max)
+
+    def x_map(mi, kj, t, counts, offs, rows):
+        safe_t = jnp.minimum(offs[kj] + t, nnzb - 1)
+        return (mi, rows[safe_t])
+
+    def w_map(mi, kj, t, counts, offs, rows):
+        return (jnp.minimum(offs[kj] + t, nnzb - 1), 0, 0)
+
+    def y_map(mi, kj, t, counts, offs, rows):
+        return (mi, kj)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bn), x_map),
+                pl.BlockSpec((1, bn, bk), w_map),
+            ],
+            out_specs=pl.BlockSpec((bm, bk), y_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(counts, offsets, row_ids, x, blocks)

@@ -1,0 +1,114 @@
+"""Jit'd public wrappers for the sparse kernels.
+
+On CPU (this container) the Pallas kernels run in ``interpret=True`` mode;
+on TPU they compile natively.  Compression runs host-side (numpy) — it is
+the SnipSnap format decoder's software half: the chosen format's metadata
+becomes scalar-prefetch arrays whose layout mirrors the kernel tiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.bitmap_spmm import bitmap_spmm_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Bitmap block-sparse
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BitmapCompressed:
+    """`B(N₁)-B(K₁)-None(N₂,K₂)` weights: payload + pre-decoded metadata."""
+
+    blocks: jax.Array          # (nnzb, bn, bk)
+    counts: jax.Array          # (K/bk,) int32
+    row_ids: jax.Array         # (nnzb,) int32
+    offsets: jax.Array         # (K/bk,) int32
+    n: int
+    k: int
+    bn: int
+    bk: int
+    max_per_col: int
+
+    @property
+    def compression_ratio(self) -> float:
+        dense = self.n * self.k
+        stored = self.blocks.shape[0] * self.bn * self.bk
+        meta = (self.n // self.bn) * (self.k // self.bk) / 8 / 2  # bits→bytes/2B
+        return (stored + meta) / dense
+
+
+def compress_bitmap(w, bn: int = 128, bk: int = 128) -> BitmapCompressed:
+    blocks, counts, row_ids, offsets, bitmap = ref.compress_bitmap_host(
+        np.asarray(w), bn, bk)
+    return BitmapCompressed(
+        blocks=jnp.asarray(blocks), counts=jnp.asarray(counts),
+        row_ids=jnp.asarray(row_ids), offsets=jnp.asarray(offsets),
+        n=w.shape[0], k=w.shape[1], bn=bn, bk=bk,
+        max_per_col=int(counts.max()) if counts.size else 1)
+
+
+def bitmap_spmm(x: jax.Array, w: BitmapCompressed, bm: int = 128
+                ) -> jax.Array:
+    """Y = X @ W_blocksparse; dispatches to the Pallas kernel."""
+    fn = functools.partial(bitmap_spmm_pallas, k=w.k, bm=bm,
+                           interpret=_interpret())
+    return jax.jit(fn)(x, w.blocks, w.counts, w.row_ids, w.offsets)
+
+
+# ---------------------------------------------------------------------------
+# N:M structured
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class NMCompressed:
+    values: jax.Array          # (N·n/m, K)
+    indices: jax.Array         # (N·n/m, K) int8 ∈ [0, m)
+    n: int
+    k: int
+    n_sel: int = 2
+    m_group: int = 4
+
+    @property
+    def compression_ratio(self) -> float:
+        # values halve; 2-bit indices ≈ n_sel/m_group · 2/16 of dense bits
+        return self.n_sel / self.m_group * (1 + 2 / 16)
+
+
+def compress_nm(w, n_sel: int = 2, m_group: int = 4) -> NMCompressed:
+    vals, idx = ref.compress_nm_host(np.asarray(w), n_sel, m_group)
+    return NMCompressed(values=jnp.asarray(vals), indices=jnp.asarray(idx),
+                        n=w.shape[0], k=w.shape[1],
+                        n_sel=n_sel, m_group=m_group)
+
+
+def nm_spmm(x: jax.Array, w: NMCompressed, bm: int = 128, bn: int = 128,
+            bk: int = 128) -> jax.Array:
+    fn = functools.partial(nm_spmm_pallas, n_sel=w.n_sel, m_group=w.m_group,
+                           bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    return jax.jit(fn)(x, w.values, w.indices)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bk: int = 128
+                    ) -> jax.Array:
+    from repro.kernels.flash_attention import flash_attention_pallas
+    fn = functools.partial(flash_attention_pallas, causal=causal,
+                           bq=bq, bk=bk, interpret=_interpret())
+    return jax.jit(fn)(q, k, v)

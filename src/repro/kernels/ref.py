@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for the sparse kernels.
+
+These are the ground truth for every Pallas kernel test (assert_allclose on
+shape/dtype sweeps) and the CPU fallback for small problems.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bitmap_mask(bitmap: jnp.ndarray, bn: int, bk: int) -> jnp.ndarray:
+    """Expand a block bitmap (N/bn, K/bk) to an element mask (N, K)."""
+    return jnp.repeat(jnp.repeat(bitmap, bn, axis=0), bk, axis=1)
+
+
+def bitmap_spmm_ref(x: jnp.ndarray, w: jnp.ndarray, bitmap: jnp.ndarray,
+                    bn: int, bk: int) -> jnp.ndarray:
+    """Y = X @ (W ⊙ block_mask).  x: (M, N), w: (N, K)."""
+    mask = bitmap_mask(bitmap, bn, bk).astype(w.dtype)
+    return jnp.dot(x, w * mask, preferred_element_type=jnp.float32)
+
+
+def nm_expand_ref(wc: jnp.ndarray, idx: jnp.ndarray, m_group: int = 4
+                  ) -> jnp.ndarray:
+    """Decompress N:M values+indices to dense.
+
+    wc/idx: (N·n/m, K) — for 2:4, (N/2, K); idx ∈ [0, m).  Returns (N, K).
+    """
+    half, k = wc.shape
+    n_sel = 2  # 2:4
+    groups = half // n_sel
+    n = groups * m_group
+    wc3 = wc.reshape(groups, n_sel, k)
+    idx3 = idx.reshape(groups, n_sel, k)
+    eq = idx3[:, :, None, :] == jnp.arange(m_group)[None, None, :, None]
+    dense = jnp.sum(jnp.where(eq, wc3[:, :, None, :], 0), axis=1)
+    return dense.reshape(n, k)
+
+
+def nm_spmm_ref(x: jnp.ndarray, wc: jnp.ndarray, idx: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Y = X @ expand(wc, idx).  x: (M, N)."""
+    return jnp.dot(x, nm_expand_ref(wc, idx).astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side compressors (numpy; used by ops.py and tests)
+# ---------------------------------------------------------------------------
+
+def compress_bitmap_host(w: np.ndarray, bn: int, bk: int):
+    """Block-compress a dense matrix: returns (blocks, col_counts, row_ids,
+    col_offsets, bitmap).
+
+    Layout is CSC over the block grid (per block-COLUMN lists of non-zero
+    block-rows) — matches the kernel's reduction order over N for each
+    output tile column.  This is the `B(N₁)-B(K₁)-None(N₂,K₂)` hierarchical
+    format realized as scalar-prefetch metadata.
+    """
+    n, k = w.shape
+    assert n % bn == 0 and k % bk == 0, (w.shape, bn, bk)
+    gn, gk = n // bn, k // bk
+    wb = w.reshape(gn, bn, gk, bk).transpose(0, 2, 1, 3)     # (gn, gk, bn, bk)
+    bitmap = np.any(wb != 0, axis=(2, 3))                    # (gn, gk)
+    counts = bitmap.sum(axis=0).astype(np.int32)             # per block-col
+    offsets = np.zeros(gk, np.int32)
+    offsets[1:] = np.cumsum(counts)[:-1]
+    total = int(counts.sum())
+    blocks = np.zeros((max(total, 1), bn, bk), w.dtype)
+    row_ids = np.zeros(max(total, 1), np.int32)
+    t = 0
+    for j in range(gk):
+        for i in range(gn):
+            if bitmap[i, j]:
+                blocks[t] = wb[i, j]
+                row_ids[t] = i
+                t += 1
+    return blocks, counts, row_ids, offsets, bitmap
+
+
+def compress_nm_host(w: np.ndarray, n_sel: int = 2, m_group: int = 4):
+    """Compress an (already N:M-pruned) matrix along its first axis.
+
+    Keeps the ``n_sel`` largest-magnitude entries per ``m_group`` (ties →
+    first), returning (values (N·n/m, K), indices int8).  Exact for inputs
+    that are genuinely N:M sparse; otherwise it acts as an N:M pruner.
+    """
+    n, k = w.shape
+    assert n % m_group == 0
+    groups = n // m_group
+    wg = w.reshape(groups, m_group, k)
+    order = np.argsort(-np.abs(wg), axis=1, kind="stable")[:, :n_sel, :]
+    order = np.sort(order, axis=1)                           # ascending pos
+    vals = np.take_along_axis(wg, order, axis=1)
+    return (vals.reshape(groups * n_sel, k).astype(w.dtype),
+            order.reshape(groups * n_sel, k).astype(np.int8))
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Dense softmax attention oracle.  q/k/v: (BH, S, D)."""
+    import jax
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(d)
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = np.tril(np.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(q.dtype), v)

@@ -1,0 +1,83 @@
+"""Batched serving driver: prompt ingestion + greedy generation against the
+decode caches, with per-phase throughput reporting.
+
+CPU quickstart (reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import Model
+
+
+def generate(model: Model, params, prompts: jax.Array, gen: int,
+             max_len: int):
+    """Greedy decode for a batch of equal-length prompts.
+
+    Prompts are ingested token-by-token through the decode path (exact KV
+    semantics for every family, incl. ring buffers and SSM states)."""
+    b, plen = prompts.shape
+    cache = model.init_cache(b, max_len)
+    step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(plen):
+        logits, cache = step(params, cache, prompts[:, t],
+                             jnp.asarray(t, jnp.int32))
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t1 = time.perf_counter()
+    for t in range(plen, plen + gen):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_gen = time.perf_counter() - t1
+    return jnp.stack(out, axis=1), t_prefill, t_gen
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+    toks, t_prefill, t_gen = generate(
+        model, params, prompts, args.gen, args.prompt_len + args.gen)
+    n_pref = args.batch * args.prompt_len
+    n_gen = args.batch * args.gen
+    print(f"[serve] {cfg.name}: batch={args.batch}")
+    print(f"  ingest  {n_pref} tok in {t_prefill:.2f}s "
+          f"({n_pref / t_prefill:.1f} tok/s)")
+    print(f"  decode  {n_gen} tok in {t_gen:.2f}s "
+          f"({n_gen / t_gen:.1f} tok/s)")
+    print(f"  sample out: {np.asarray(toks[0, :8])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Attention: chunked causal (flash-style online softmax via lax.scan),
+sliding-window local attention, and single-token decode against a KV cache.
+
+Memory discipline: full (S, S) score matrices are never materialized — the
+KV axis is scanned in chunks with a running (max, denominator, numerator)
+accumulator, so peak live memory is O(B · H · Sq_chunk · Skv_chunk).  This is
+what keeps prefill_32k compilable; on TPU the same schedule is what a Pallas
+flash kernel would pin into VMEM.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import optflags
+from repro.models.layers import COMPUTE_DTYPE, apply_rope
+from repro.models.sharding import shard
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, D) → (B, S, Hkv·n_rep, D) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+        .reshape(b, s, h * n_rep, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, H, D) (same H after GQA repeat).
+    ``window`` > 0 restricts attention to the last ``window`` keys (local).
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill = 0
+    with Sq == Skv; decode uses decode_attention instead).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = (sq + q_chunk - 1) // q_chunk
+    nk = (skv + kv_chunk - 1) // kv_chunk
+    # pad to whole chunks
+    sq_p, skv_p = nq * q_chunk, nk * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+
+    qs = jnp.moveaxis(qp.reshape(b, nq, q_chunk, h, d), 1, 0)
+    ks = jnp.moveaxis(kp.reshape(b, nk, kv_chunk, h, d), 1, 0)
+    vs = jnp.moveaxis(vp.reshape(b, nk, kv_chunk, h, d), 1, 0)
+    q_pos = q_offset + jnp.arange(sq_p).reshape(nq, q_chunk)
+    k_pos = jnp.arange(skv_p).reshape(nk, kv_chunk)
+    k_valid = (jnp.arange(skv_p) < skv).reshape(nk, kv_chunk)
+
+    def q_block(args):
+        qi, qpos = args                     # (B, qc, H, D), (qc,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpos, kval = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, ki) * scale
+            mask = kval[None, None, None, :]
+            if causal:
+                mask = mask & (kpos[None, None, None, :] <=
+                               qpos[None, None, :, None])
+            if window > 0:
+                mask = mask & (kpos[None, None, None, :] >
+                               qpos[None, None, :, None] - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(COMPUTE_DTYPE), vi)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (ks, vs, k_pos, k_valid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2)      # (B, qc, H, D)
+
+    outs = jax.lax.map(q_block, (qs, q_pos))            # (nq, B, qc, H, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq_p, h, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention_gqa(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, length: jax.Array) -> jax.Array:
+    """Grouped-query decode attention WITHOUT materializing repeated KV.
+
+    q: (B, H, D); caches: (B, S, Hkv, D) with H = r·Hkv.  The cache is
+    consumed in its stored layout (S may be model-sharded: the only
+    cross-shard values are the (B, Hkv, r)-sized softmax stats and the
+    (B, Hkv, r, D) output partials — never the cache itself)."""
+    b, s, hk, d = k_cache.shape
+    h = q.shape[1]
+    r = h // hk
+    qg = q.reshape(b, hk, r, d)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg, k_cache) * scale
+    valid = (jnp.arange(s) < length)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", w.astype(COMPUTE_DTYPE), v_cache)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, H, D); caches: (B, S, H, D); ``length``: number of valid cache
+    positions (scalar).  Cost is linear in S — this is the decode_32k /
+    long_500k step.
+    """
+    b, s, h, d = k_cache.shape
+    scale = 1.0 / math.sqrt(d)
+    valid = jnp.arange(s) < length                       # (S,)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k_cache) * scale
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", w.astype(COMPUTE_DTYPE), v_cache)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + rope + attention + out-proj)
+# ---------------------------------------------------------------------------
+
+def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                    freqs: Optional[jax.Array], positions: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    kv_override: Optional[tuple[jax.Array, jax.Array]] = None,
+                    ) -> jax.Array:
+    """Training/prefill attention over a full sequence.
+
+    ``kv_override`` supplies external K/V inputs (cross-attention)."""
+    b, s, _ = x.shape
+    nh, nk, hd = L.eff_heads(cfg.n_heads), cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,de->bte", x, p["wq"].astype(COMPUTE_DTYPE))
+    q = q.reshape(b, s, nh, hd)
+    if kv_override is None:
+        k = jnp.einsum("btd,de->bte", x, p["wk"].astype(COMPUTE_DTYPE))
+        v = jnp.einsum("btd,de->bte", x, p["wv"].astype(COMPUTE_DTYPE))
+        k = k.reshape(b, s, nk, hd)
+        v = v.reshape(b, s, nk, hd)
+        k = apply_rope(k, positions, freqs)
+    else:
+        xkv = kv_override[0]
+        skv = xkv.shape[1]
+        k = jnp.einsum("btd,de->bte", xkv, p["wk"].astype(COMPUTE_DTYPE))
+        v = jnp.einsum("btd,de->bte", xkv, p["wv"].astype(COMPUTE_DTYPE))
+        k = k.reshape(b, skv, nk, hd)
+        v = v.reshape(b, skv, nk, hd)
+    q = apply_rope(q, positions, freqs)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    rep = nh // max(nk, 1)
+    k, v = _repeat_kv(k, rep), _repeat_kv(v, rep)
+    o = chunked_attention(q, k, v, causal=causal, window=window)
+    o = o.reshape(b, s, nh * hd)
+    return jnp.einsum("bte,ed->btd", o, p["wo"].astype(COMPUTE_DTYPE))
+
+
+def attention_decode_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                           freqs: Optional[jax.Array], pos: jax.Array,
+                           k_cache: jax.Array, v_cache: jax.Array,
+                           cache_pos: jax.Array,
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention step.
+
+    x: (B, d).  Caches (B, S, Hkv, D) are updated at ``cache_pos`` (ring
+    position for sliding windows; == pos for full caches).  Returns
+    (out (B, d), new_k_cache, new_v_cache).
+    """
+    b, _ = x.shape
+    nh, nk, hd = L.eff_heads(cfg.n_heads), cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bd,de->be", x, p["wq"].astype(COMPUTE_DTYPE))
+    k = jnp.einsum("bd,de->be", x, p["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("bd,de->be", x, p["wv"].astype(COMPUTE_DTYPE))
+    pos1 = jnp.reshape(pos, (1,))
+    q = apply_rope(q.reshape(b, 1, nh, hd), pos1, freqs).reshape(b, nh, hd)
+    k = apply_rope(k.reshape(b, 1, nk, hd), pos1, freqs).reshape(b, nk, hd)
+    v = v.reshape(b, nk, hd)
+    if optflags.enabled("maskedkv"):
+        # one-hot masked blend: elementwise along the (possibly model-
+        # sharded) S axis — no replicate-and-repartition, unlike a dynamic
+        # update at a traced index.  Costs one cache-sized RMW pass.
+        hot = (jnp.arange(k_cache.shape[1]) == cache_pos)[None, :, None, None]
+        k_cache = jnp.where(hot, k[:, None].astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(hot, v[:, None].astype(v_cache.dtype), v_cache)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k[:, None].astype(k_cache.dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v[:, None].astype(v_cache.dtype), cache_pos, axis=1)
+    s_max = k_cache.shape[1]
+    length = jnp.minimum(pos + 1, s_max)
+    if optflags.enabled("gqagroup"):
+        o = decode_attention_gqa(q, k_cache, v_cache, length)
+    else:
+        rep = nh // max(nk, 1)
+        o = decode_attention(q, _repeat_kv(k_cache, rep),
+                             _repeat_kv(v_cache, rep), length)
+    o = o.reshape(b, nh * hd)
+    out = jnp.einsum("be,ed->bd", o, p["wo"].astype(COMPUTE_DTYPE))
+    return out, k_cache, v_cache

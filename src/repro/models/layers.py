@@ -1,0 +1,203 @@
+"""Core layers: norms, embeddings, RoPE, MLP, parameter init.
+
+Pure-functional JAX: params are nested dicts of arrays; every layer is a
+plain function.  Layer stacks are STACKED along a leading axis and consumed
+by ``jax.lax.scan`` (transformer.py) so that HLO size stays O(1) in depth —
+essential for compiling 62-layer models on 512 host devices.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import optflags
+from repro.models.sharding import shard
+
+TP_DEGREE = 16   # production model-axis size (padheads rounds up to this)
+
+
+def eff_heads(n: int) -> int:
+    """Head count after optional pad-to-TP-multiple (optflags 'padheads')."""
+    if optflags.enabled("padheads") and n % TP_DEGREE:
+        return ((n // TP_DEGREE) + 1) * TP_DEGREE
+    return n
+
+
+Dtype = jnp.dtype
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def _init(key, shape, scale_axis: int = 0, dtype=PARAM_DTYPE):
+    fan_in = shape[scale_axis]
+    return jax.random.normal(key, shape, dtype) / math.sqrt(max(fan_in, 1))
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Token embedding with vocab-sharded table (gather lowers to a sharded
+    take; XLA inserts the all-gather on the vocab axis)."""
+    out = jnp.take(table, tokens, axis=0).astype(COMPUTE_DTYPE)
+    return shard(out, "batch", None, None)
+
+
+def unembed_loss(x: jax.Array, table: jax.Array, labels: jax.Array,
+                 chunk: int = 512) -> jax.Array:
+    """Next-token cross-entropy with sequence-chunked logits.
+
+    Never materializes (B, S, V); scans over S in ``chunk`` slices so the
+    live logits buffer is (B, chunk, V) — sharded over batch(data) and
+    vocab(model).  Returns mean loss over all positions.
+    """
+    b, s, d = x.shape
+    v = table.shape[0]
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    xc = x[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+    yc = labels[:, : n_chunks * chunk].reshape(b, n_chunks, chunk)
+    xc = jnp.moveaxis(xc, 1, 0)          # (n_chunks, B, chunk, d)
+    yc = jnp.moveaxis(yc, 1, 0)
+
+    tbl = table.astype(COMPUTE_DTYPE)
+
+    def body(carry, inp):
+        xi, yi = inp
+        logits = jnp.einsum("btd,vd->btv", xi, tbl).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yi[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+    return total / (b * n_chunks * chunk)
+
+
+def logits_head(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Decode-time logits for the last position only: (B, V)."""
+    logits = jnp.einsum("bd,vd->bv", x, table.astype(COMPUTE_DTYPE))
+    return shard(logits.astype(jnp.float32), "batch", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig) -> Optional[jax.Array]:
+    if cfg.rope_fraction <= 0.0:
+        return None
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    return cfg.rope_base ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: Optional[jax.Array]
+               ) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S).
+
+    Applies rotary embedding to the first ``2·len(freqs)`` features of D
+    (``rope_fraction`` < 1 leaves the tail untouched — ChatGLM-style)."""
+    if freqs is None:
+        return x
+    rot = 2 * freqs.shape[0]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = out.reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, x[..., rot:]], axis=-1) if rot < x.shape[-1] else out
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) + params
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": _init(k1, (d, f)),
+        "w_up": _init(k2, (d, f)),
+        "w_down": _init(k3, (f, d)),
+    }
+
+
+def mlp(x: jax.Array, p: dict) -> jax.Array:
+    g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(COMPUTE_DTYPE))
+    u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(COMPUTE_DTYPE))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", None, "model")
+    return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(COMPUTE_DTYPE))
+
+
+def attn_params(key, cfg: ModelConfig) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, nk = cfg.d_model, cfg.head_dim, cfg.n_kv_heads
+    nh = eff_heads(cfg.n_heads)
+    return {
+        "wq": _init(kq, (d, nh * h)),
+        "wk": _init(kk, (d, nk * h)),
+        "wv": _init(kv, (d, nk * h)),
+        "wo": _init(ko, (nh * h, d)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse FFN (serve path, optflags 'sparseffn')
+# ---------------------------------------------------------------------------
+
+def sparse_mlp_params(key, cfg: ModelConfig, density: float = 0.25,
+                      bn: int = 128, bk: int = 128) -> dict:
+    """FFN up/gate weights in the SnipSnap-chosen block-bitmap format:
+    per-block-column padded payload (gk, T, bn, bk) + block-row ids.
+    w_down stays dense (its contraction dim is model-sharded; gathering
+    across shards would trade memory for collectives)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.d_ff
+    gn, gk = d // bn, f // bk
+    t = max(1, int(gn * density))
+    return {
+        "payload_gate": _init(k1, (gk, t, bn, bk), scale_axis=2),
+        "rows_gate": jnp.zeros((gk, t), jnp.int32),
+        "payload_up": _init(k2, (gk, t, bn, bk), scale_axis=2),
+        "rows_up": jnp.zeros((gk, t), jnp.int32),
+        "w_down": _init(k3, (f, d)),
+        "_meta": jnp.array([bn, bk], jnp.int32),
+    }
+
+
+def _bsp_matmul(x: jax.Array, payload: jax.Array, rows: jax.Array
+                ) -> jax.Array:
+    """x: (B, N); payload: (gk, T, bn, bk); rows: (gk, T) block-row ids.
+    Streams ONLY the non-zero payload blocks (the compressed format's win:
+    weight traffic × block density)."""
+    b, n = x.shape
+    gk, t, bn, bk = payload.shape
+    xb = x.reshape(b, n // bn, bn)
+    xsel = jnp.take(xb, rows.reshape(-1), axis=1)       # (B, gk·T, bn)
+    xsel = xsel.reshape(b, gk, t, bn)
+    y = jnp.einsum("bgtn,gtnk->bgk", xsel,
+                   payload.astype(COMPUTE_DTYPE))
+    return y.reshape(b, gk * bk)
+
+
+def sparse_mlp_decode(x: jax.Array, p: dict) -> jax.Array:
+    """Single-token SwiGLU FFN over block-compressed up/gate weights."""
+    g = _bsp_matmul(x, p["payload_gate"], p["rows_gate"])
+    u = _bsp_matmul(x, p["payload_up"], p["rows_up"])
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "model")
+    return jnp.einsum("bf,fd->bd", h, p["w_down"].astype(COMPUTE_DTYPE))

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts: token-choice top-k routing, GShard-style capacity
+dispatch, expert-parallel over the ``model`` mesh axis.
+
+Dispatch is expressed as einsums over a (tokens, experts, capacity) one-hot —
+fully SPMD-friendly (no data-dependent scatter), with tokens grouped into
+small routing groups (``router_group``) so the dispatch tensor stays
+O(group · E · C) instead of O(global_tokens · E · C).  Expert weights are
+sharded on the expert axis (EP); XLA inserts the all-to-all between the
+data-sharded token groups and model-sharded experts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, _init
+from repro.models.sharding import shard
+
+
+def moe_params(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    assert m is not None
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, m.d_expert, m.n_experts
+    return {
+        "router": _init(kr, (d, e)),
+        "w_gate": _init(k1, (e, d, f), scale_axis=1),
+        "w_up": _init(k2, (e, d, f), scale_axis=1),
+        "w_down": _init(k3, (e, f, d), scale_axis=1),
+    }
+
+
+def _capacity(group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(group * m.top_k * m.capacity_factor / m.n_experts) + 1
+    return max(4, min(c, group))
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) → (B, S, d).  Top-k routing with capacity dropping."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, f, k = m.n_experts, m.d_expert, m.top_k
+    grp = min(m.router_group, s)
+    ng = (b * s) // grp
+    xg = x.reshape(ng, grp, d)
+    cap = _capacity(grp, cfg)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(COMPUTE_DTYPE))
+    logits = logits.astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                  # (g, t, E)
+    topw, tope = jax.lax.top_k(gates, k)                     # (g, t, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) in its expert's buffer, via cumsum over
+    # the flattened (slot-major) one-hot — tokens beyond capacity are dropped.
+    onehot = jax.nn.one_hot(tope, e, dtype=jnp.float32)      # (g, t, k, E)
+    slot_major = jnp.moveaxis(onehot, 2, 1).reshape(ng, k * grp, e)
+    pos = jnp.cumsum(slot_major, axis=1) - slot_major        # (g, k·t, E)
+    pos = jnp.moveaxis(pos.reshape(ng, k, grp, e), 1, 2)     # (g, t, k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (g, t, k)
+    keep = (pos < cap) & (topw > 0.0)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    cap_oh = jax.nn.one_hot(pos, cap, dtype=COMPUTE_DTYPE)   # (g, t, k, C)
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(COMPUTE_DTYPE),
+                      cap_oh * keep[..., None].astype(COMPUTE_DTYPE))
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(COMPUTE_DTYPE),
+                      cap_oh, (topw * keep).astype(COMPUTE_DTYPE))
+
+    xe = jnp.einsum("gtd,gtec->gecd", xg, disp)              # (g, E, C, d)
+    xe = shard(xe, "batch", "expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(COMPUTE_DTYPE))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(COMPUTE_DTYPE))
+    h = jax.nn.silu(h) * u
+    h = shard(h, "batch", "expert", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(COMPUTE_DTYPE))
+    y = jnp.einsum("gecd,gtec->gtd", ye, comb)
+    return y.reshape(b, s, d)
+
+
+def moe_decode(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Single-token MoE: x (B, d).  s=1 makes each token its own routing
+    group, so capacity dropping degenerates to pure top-k (no drops)."""
+    return moe_block(x[:, None, :], p, cfg)[:, 0, :]

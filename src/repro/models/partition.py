@@ -1,0 +1,157 @@
+"""Parameter / cache PartitionSpecs — Megatron-style TP on the ``model``
+axis, DP over ``data`` (+``pod``), EP for MoE experts.
+
+Rules are applied by leaf path + array rank, with leading stack axes
+(scan-over-layers) padded with ``None``.  A dim is only sharded when its
+extent divides the mesh axis size — otherwise the spec falls back to
+replication for that dim (e.g. 8 KV heads on a 16-way model axis shard the
+cache's SEQUENCE axis instead: flash-decode-style sequence parallelism).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional  # noqa: F401
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import optflags
+
+PyTree = Any
+
+# trailing-dims rules: leaf-name → (spec for last N dims)
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_x", "w_y",
+        "w_a", "w_i")                       # (d_model, wide): shard wide
+_ROW = ("wo", "w_down", "w_out")            # (wide, d_model): shard wide
+_REPL = ("ln1", "ln2", "ln3", "final_norm", "enc_norm", "norm", "conv",
+         "lam", "A_log", "D", "dt_bias", "router")
+
+
+def _last_name(path) -> str:
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return str(e.key)
+    return ""
+
+
+def _divisible(extent: int, axis_size: Optional[int]) -> bool:
+    return axis_size is not None and axis_size > 0 and extent % axis_size == 0
+
+
+def param_specs(params: PyTree, mesh_axes: dict[str, int],
+                data_axes: tuple[str, ...] = ("data",),
+                model_axis: str = "model",
+                kv_heads: Optional[int] = None) -> PyTree:
+    """PartitionSpec pytree matching ``params``.
+
+    ``mesh_axes`` maps axis name → size (for divisibility checks).
+    Optimizer-state sharding reuses these specs (ZeRO-style: states shard
+    exactly like their parameters).  With optflag 'replkv', K/V projections
+    whose head count does not divide the TP degree are REPLICATED (they are
+    small under GQA) — sharding their flat output forces XLA into
+    replicate-and-repartition copies at the (B,S,H,D) reshape.
+    """
+    msize = mesh_axes.get(model_axis, 1)
+    repl_kv = (optflags.enabled("replkv") and
+               (kv_heads is None or kv_heads % msize != 0))
+
+    def rule(path, leaf) -> P:
+        name = _last_name(path)
+        nd = leaf.ndim
+        path_s = jax.tree_util.keystr(path)
+        if name == "embed":
+            if _divisible(leaf.shape[0], msize):
+                return P(model_axis, None)
+            return P(None, None)
+        if name in ("payload_gate", "payload_up") and nd >= 4:
+            # block-sparse FFN payload (…, gk, T, bn, bk): block-column EP
+            if _divisible(leaf.shape[-4], msize):
+                return P(*([None] * (nd - 4)), model_axis, None, None, None)
+            return P(*([None] * nd))
+        if name in ("rows_gate", "rows_up") and nd >= 2:
+            if _divisible(leaf.shape[-2], msize):
+                return P(*([None] * (nd - 2)), model_axis, None)
+            return P(*([None] * nd))
+        if name in ("wk", "wv") and repl_kv:
+            return P(*([None] * nd))
+        if name in _REPL or name == "_meta":
+            return P(*([None] * nd))
+        if name in ("w_gate", "w_up", "w_down") and "ffn" in path_s and nd >= 3:
+            # MoE expert stacks (…, E, d, f): shard the expert axis (EP)
+            if _divisible(leaf.shape[-3], msize):
+                return P(*([None] * (nd - 3)), model_axis, None, None)
+            return P(*([None] * nd))
+        if name in _COL and nd >= 2:
+            if _divisible(leaf.shape[-1], msize):
+                return P(*([None] * (nd - 1)), model_axis)
+            return P(*([None] * nd))
+        if name in _ROW and nd >= 2:
+            if _divisible(leaf.shape[-2], msize):
+                return P(*([None] * (nd - 2)), model_axis, None)
+            return P(*([None] * nd))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def cache_specs(cache: PyTree, mesh_axes: dict[str, int],
+                data_axes: tuple[str, ...] = ("data",),
+                model_axis: str = "model") -> PyTree:
+    """Decode-cache sharding.
+
+    KV caches are (L, B, S, H, D): batch → data; heads → model when
+    divisible, else the SEQUENCE axis → model (KV sequence parallelism —
+    each model shard holds a slice of the context, softmax combines via
+    XLA-inserted collectives).  States (L, B, …) shard batch + the widest
+    divisible feature axis.
+    """
+    msize = mesh_axes.get(model_axis, 1)
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh_axes.get(a, 1)
+    batch_spec = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def rule(path, leaf) -> P:
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        name = _last_name(path)
+        if name in ("k", "v") and nd == 5:
+            l, b, s, h, d = leaf.shape
+            bspec = batch_spec if b % dsize == 0 else None
+            if h % msize == 0:
+                return P(None, bspec, None, model_axis, None)
+            if s % msize == 0:
+                return P(None, bspec, model_axis, None, None)
+            return P(None, bspec, None, None, None)
+        # generic states: (L, B, …) — shard batch; widest divisible tail axis
+        spec: list = [None] * nd
+        if nd >= 2 and leaf.shape[1] % dsize == 0:
+            spec[1] = batch_spec
+        for ax in range(nd - 1, 1, -1):
+            if leaf.shape[ax] % msize == 0 and leaf.shape[ax] >= msize:
+                spec[ax] = model_axis
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def batch_specs(batch: PyTree, mesh_axes: dict[str, int],
+                data_axes: tuple[str, ...] = ("data",)) -> PyTree:
+    """Input batches shard the leading (batch) axis over the data axes —
+    replicated when the batch doesn't divide (e.g. long_500k's batch=1)."""
+    bspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh_axes.get(a, 1)
+
+    def rule(path, leaf) -> P:
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return P()
+        if leaf.shape[0] % dsize != 0:
+            return P(*([None] * nd))
+        return P(*([bspec] + [None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)

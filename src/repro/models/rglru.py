@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)  with
+a_t = exp(−c · softplus(Λ) · r_t)  is a first-order linear recurrence —
+computed with ``jax.lax.associative_scan`` over time (log-depth, parallel),
+the TPU-idiomatic replacement for a sequential RNN loop.
+
+The full recurrent block is: x → {linear branch (GeLU), recurrent branch
+(causal conv1d → RG-LRU)} → elementwise product → out-projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, _init
+from repro.models.sharding import shard
+
+_C = 8.0  # RG-LRU gate sharpness constant (paper value)
+
+
+def rglru_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dr = d  # recurrence width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": _init(ks[0], (d, dr)),          # recurrent branch in-proj
+        "w_y": _init(ks[1], (d, dr)),          # gate (linear) branch
+        "w_out": _init(ks[2], (dr, d)),
+        "conv": _init(ks[3], (4, dr), scale_axis=0),
+        "w_a": _init(ks[4], (dr, dr)),         # recurrence gate
+        "w_i": _init(ks[5], (dr, dr)),         # input gate
+        "lam": jnp.full((dr,), 3.0, jnp.float32),   # Λ: a ≈ 0.95 at r=1
+    }
+
+
+def _gates(x, p):
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x,
+                                  p["w_a"].astype(COMPUTE_DTYPE)))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x,
+                                  p["w_i"].astype(COMPUTE_DTYPE)))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta, i
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i: i + x.shape[1], :] * w[i]
+    return out
+
+
+def rglru_scan(x: jax.Array, a: jax.Array, beta: jax.Array,
+               h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t h_{t-1} + beta_t x_t via associative scan.  x/a/beta:
+    (B, S, D); h0: (B, D).  Returns (h (B,S,D), h_final)."""
+    bx = beta.astype(jnp.float32) * x.astype(jnp.float32)
+    # fold h0 into the first element
+    bx = bx.at[:, 0, :].add(a[:, 0, :].astype(jnp.float32) * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), bx), axis=1)
+    return hh.astype(x.dtype), hh[:, -1, :]
+
+
+def rglru_block(x: jax.Array, p: dict, cfg: ModelConfig
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full recurrent block over a sequence.  x: (B, S, d).
+    Returns (y, h_final, conv_tail) — the latter two seed decode caches."""
+    xr = jnp.einsum("btd,de->bte", x, p["w_x"].astype(COMPUTE_DTYPE))
+    gate = jax.nn.gelu(jnp.einsum("btd,de->bte", x,
+                                  p["w_y"].astype(COMPUTE_DTYPE)))
+    conv = _causal_conv(xr, p["conv"].astype(COMPUTE_DTYPE))
+    a, beta, i_gate = _gates(conv, p)
+    h, h_last = rglru_scan(conv * i_gate, a, beta,
+                           jnp.zeros(conv.shape[::2], conv.dtype))
+    h = shard(h, "batch", None, "model")
+    y = jnp.einsum("bte,ed->btd", h * gate, p["w_out"].astype(COMPUTE_DTYPE))
+    conv_tail = xr[:, -(p["conv"].shape[0] - 1):, :]
+    return y, h_last, conv_tail
+
+
+def rglru_decode(x: jax.Array, p: dict, cfg: ModelConfig,
+                 h: jax.Array, conv_state: jax.Array
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token step.  x: (B, d); h: (B, dr); conv_state: (B, K-1, dr)."""
+    xr = jnp.einsum("bd,de->be", x, p["w_x"].astype(COMPUTE_DTYPE))
+    gate = jax.nn.gelu(jnp.einsum("bd,de->be", x,
+                                  p["w_y"].astype(COMPUTE_DTYPE)))
+    window = jnp.concatenate([conv_state, xr[:, None, :]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv"].astype(COMPUTE_DTYPE))
+    new_conv_state = window[:, 1:, :]
+    a, beta, i_gate = _gates(conv, p)
+    h_new = (a.astype(jnp.float32) * h.astype(jnp.float32) +
+             beta.astype(jnp.float32) *
+             (conv * i_gate).astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("be,ed->bd", h_new * gate,
+                   p["w_out"].astype(COMPUTE_DTYPE))
+    return y, h_new, new_conv_state

@@ -1,0 +1,163 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked parallel scan.
+
+Implements the SSD algorithm of arXiv:2405.21060: the sequence is split into
+chunks; within a chunk the recurrence is computed as masked matmuls
+("attention-like" duality), and chunk states are propagated by a short
+``lax.scan`` over chunks.  Per-head scalar decay A (Mamba-2 restriction),
+B/C projections shared across heads in a group (we use one group).
+
+Decode is the O(1) recurrent step on the carried state
+(B, heads, head_dim, d_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, _init
+from repro.models.sharding import shard
+
+
+def ssm_params(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    d_in = d * s.expand
+    nh = d_in // s.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        # in_proj emits [x, z(gate), B, C, dt]
+        "w_in": _init(ks[0], (d, 2 * d_in + 2 * s.d_state + nh)),
+        "w_out": _init(ks[1], (d_in, d)),
+        "conv": _init(ks[2], (s.d_conv, d_in + 2 * s.d_state), scale_axis=0),
+        "A_log": jnp.zeros((nh,), jnp.float32) + jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+    }
+
+
+def _split_proj(xz: jax.Array, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nh = d_in // s.head_dim
+    x, z, Bm, Cm, dt = jnp.split(
+        xz, [d_in, 2 * d_in, 2 * d_in + s.d_state,
+             2 * d_in + 2 * s.d_state], axis=-1)
+    return x, z, Bm, Cm, dt, nh, d_in
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. x: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):                      # K is tiny (4): unrolled
+        out = out + xp[:, i: i + x.shape[1], :] * w[i]
+    return out
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) values; dt: (B, S, H) softplus'd step; A: (H,) decay
+    rate (negative); Bm/Cm: (B, S, N) input/output projections.
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    # (nc, B, L, ...) layout: one lax.scan over chunks does BOTH the
+    # intra-chunk masked matmul and the inter-chunk state recurrence, so the
+    # O(L²) score tensor is live for a single chunk only.
+    xc = jnp.moveaxis(xh.reshape(b, nc, chunk, h, p), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, chunk, h), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(b, nc, chunk, n), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(b, nc, chunk, n), 1, 0)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        xi, dti, Bi, Ci = inp                           # (B,L,H,P) (B,L,H) ...
+        dA = dti * A[None, None, :]                     # (B,L,H) ≤ 0
+        cum = jnp.cumsum(dA, axis=1)
+        seg = cum[:, -1, :]                             # (B,H) chunk decay
+        # L_mat[i,j] = exp(cum_i - cum_j), i ≥ j.  Mask BEFORE exp: the
+        # upper triangle has diff > 0 and exp would overflow to inf, which
+        # poisons gradients through the where (NaN via inf·0).
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,L,L,H)
+        diff = jnp.where(mask[None, :, :, None], diff, -jnp.inf)
+        l_mat = jnp.exp(diff)
+        scores = jnp.einsum("bin,bjn->bij", Ci, Bi)     # (B,L,L)
+        gated = (scores[..., None] * l_mat *
+                 dti[:, None, :, :]).astype(COMPUTE_DTYPE)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", gated, xi)
+        # carried-state contribution to each position
+        w_in = jnp.exp(cum).astype(COMPUTE_DTYPE)
+        y_off = jnp.einsum("bln,blh,bhpn->blhp",
+                           Ci.astype(COMPUTE_DTYPE), w_in, state)
+        # state update: decay whole chunk + decay-to-end-weighted inputs
+        w_end = jnp.exp(seg[:, None, :] - cum)          # (B,L,H)
+        st_in = jnp.einsum("bln,blh,blhp->bhpn", Bi.astype(COMPUTE_DTYPE),
+                           (w_end * dti).astype(COMPUTE_DTYPE), xi)
+        new_state = state * jnp.exp(seg)[..., None, None].astype(state.dtype) \
+            + st_in
+        return new_state, y_diag + y_off
+
+    init = jnp.zeros((b, h, p, n), COMPUTE_DTYPE)
+    final, ys = jax.lax.scan(step, init, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_block(x: jax.Array, p: dict, cfg: ModelConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    """Full Mamba-2 mixer over a sequence.  x: (B, S, d) → (y, final_state)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"].astype(COMPUTE_DTYPE))
+    xi, z, Bm, Cm, dt, nh, d_in = _split_proj(xz, cfg)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv"].astype(COMPUTE_DTYPE)))
+    xi, Bm, Cm = jnp.split(conv_out, [d_in, d_in + s_cfg.d_state], axis=-1)
+    xh = xi.reshape(b, s, nh, s_cfg.head_dim)
+    xh = shard(xh, "batch", None, "model", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(s_cfg.chunk, s)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + xh * p["D"].astype(COMPUTE_DTYPE)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = y * jax.nn.silu(z)                               # gated output
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"].astype(COMPUTE_DTYPE))
+    return out, state
+
+
+def ssm_decode(x: jax.Array, p: dict, cfg: ModelConfig,
+               state: jax.Array, conv_state: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) recurrent step.  x: (B, d); state: (B, H, P, N);
+    conv_state: (B, K-1, conv_channels) rolling window."""
+    s_cfg = cfg.ssm
+    b, d = x.shape
+    xz = jnp.einsum("bd,de->be", x, p["w_in"].astype(COMPUTE_DTYPE))
+    xi, z, Bm, Cm, dt, nh, d_in = _split_proj(xz, cfg)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)     # (B, C)
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)
+    w = p["conv"].astype(COMPUTE_DTYPE)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))
+    new_conv_state = window[:, 1:, :]
+    xi, Bm, Cm = jnp.split(conv_out, [d_in, d_in + s_cfg.d_state], axis=-1)
+    xh = xi.reshape(b, nh, s_cfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                     # (B, H)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh, Bm.astype(COMPUTE_DTYPE),
+                     dt.astype(COMPUTE_DTYPE))
+    state = state * decay[..., None, None].astype(state.dtype) + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(COMPUTE_DTYPE))
+    y = y + xh * p["D"].astype(COMPUTE_DTYPE)[None, :, None]
+    y = y.reshape(b, d_in) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"].astype(COMPUTE_DTYPE))
+    return out, state, new_conv_state

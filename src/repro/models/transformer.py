@@ -1,0 +1,535 @@
+"""Model assembly for all assigned families.
+
+Design rules:
+  * layers are STACKED and consumed by ``jax.lax.scan`` — HLO is O(1) in
+    depth (62-layer models compile in seconds, not minutes);
+  * heterogeneous stacks (Gemma3 5:1 local:global, RecurrentGemma 1:2
+    attn:recurrent) scan over SUPER-BLOCKS whose bodies apply the exact
+    interleave, with a small tail stack for the remainder;
+  * every train-mode layer body is wrapped in ``jax.checkpoint`` (remat) so
+    activation memory is O(layers · boundary), not O(layers · internals);
+  * decode carries stacked caches (KV rings for local attention, full KV for
+    global, SSM/LRU states) and updates them functionally via scan outputs.
+
+The public surface is :class:`Model` (init / loss / prefill / decode_step /
+init_cache) + :func:`input_specs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import attention as attn
+from repro.models import optflags
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import ssm as ssm_mod
+from repro.models.sharding import shard
+
+PyTree = Any
+
+
+def _ckpt(fn):
+    """Remat wrapper.  With 'saveremat', tensors named 'ar_out' (the
+    post-all-reduce block outputs) are SAVED, so the backward pass never
+    replays TP collectives — Megatron-style selective recompute."""
+    if optflags.enabled("saveremat"):
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names("ar_out"))
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind layer params
+# ---------------------------------------------------------------------------
+
+def _layer_params(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: dict = {"ln1": jnp.zeros((d,), jnp.float32),
+               "ln2": jnp.zeros((d,), jnp.float32)}
+    if kind in ("attn", "local", "global", "cross"):
+        p["attn"] = L.attn_params(ks[0], cfg)
+        if kind == "cross":
+            p["cross"] = L.attn_params(ks[2], cfg)
+            p["ln3"] = jnp.zeros((d,), jnp.float32)
+        if cfg.moe:
+            p["ffn"] = moe_mod.moe_params(ks[1], cfg)
+        elif optflags.enabled("sparseffn") and cfg.sparse_ffn:
+            p["ffn"] = L.sparse_mlp_params(ks[1], cfg)
+        else:
+            p["ffn"] = L.mlp_params(ks[1], cfg)
+    elif kind == "rec":
+        p["rec"] = rg.rglru_params(ks[0], cfg)
+        p["ffn"] = L.mlp_params(ks[1], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_params(ks[0], cfg)
+        del p["ln2"]
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _stack(key, n: int, make) -> PyTree:
+    """Stack n independently-initialized param pytrees along axis 0."""
+    keys = jax.random.split(key, n)
+    trees = [make(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Forward bodies (train/prefill mode)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(x, p, cfg: ModelConfig):
+    if cfg.moe:
+        return moe_mod.moe_block(x, p, cfg)
+    return L.mlp(x, p)
+
+
+def _seqpar(x):
+    """Sequence-parallel residual stream (optflag 'seqpar'): shard S on the
+    model axis between blocks — XLA then lowers the TP psum as
+    reduce-scatter and re-gathers at the next projection."""
+    if optflags.enabled("seqpar") and x.ndim == 3 and x.shape[1] % 16 == 0:
+        return shard(x, "batch", "model", None)
+    return x
+
+
+def _attn_layer(x, p, cfg, freqs, positions, *, causal=True, window=0,
+                kv_override=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + checkpoint_name(
+        attn.attention_block(h, p["attn"], cfg, freqs, positions,
+                             causal=causal, window=window), "ar_out")
+    x = _seqpar(x)
+    if kv_override is not None:
+        h = L.rms_norm(x, p["ln3"], cfg.norm_eps)
+        x = x + attn.attention_block(h, p["cross"], cfg, None, positions,
+                                     causal=False, kv_override=kv_override)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return _seqpar(x + checkpoint_name(_ffn_apply(h, p["ffn"], cfg),
+                                       "ar_out"))
+
+
+def _rec_layer(x, p, cfg):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, h_last, conv_tail = rg.rglru_block(h, p["rec"], cfg)
+    x = x + y
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp(h, p["ffn"]), (h_last, conv_tail)
+
+
+def _ssm_layer(x, p, cfg):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, state = ssm_mod.ssm_block(h, p["ssm"], cfg)
+    return x + y, state
+
+
+# ---------------------------------------------------------------------------
+# Stack runners (scan over stacked layer params)
+# ---------------------------------------------------------------------------
+
+def _run_uniform(x, stacked, cfg: ModelConfig, freqs, positions, kind: str,
+                 remat: bool, window: int = 0):
+    causal = cfg.family != "encdec" or kind != "enc"
+
+    def body(h, p):
+        if kind == "ssm":
+            out, _ = _ssm_layer(h, p, cfg)
+        else:
+            out = _attn_layer(h, p, cfg, freqs, positions,
+                              causal=causal, window=window)
+        return out, None
+
+    fn = _ckpt(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, stacked)
+    return x
+
+
+def _run_gemma3(x, params, cfg: ModelConfig, freqs_l, freqs_g, positions,
+                remat: bool):
+    """10×(5 local + 1 global) + 2 local."""
+    def super_block(h, p):
+        def local_body(hh, pp):
+            return _attn_layer(hh, pp, cfg, freqs_l, positions, causal=True,
+                               window=cfg.window), None
+
+        def global_body(hh, pp):
+            return _attn_layer(hh, pp, cfg, freqs_g, positions, causal=True)
+
+        lb = _ckpt(local_body) if remat else local_body
+        h, _ = jax.lax.scan(lb, h, p["local"])
+        gb = _ckpt(global_body) if remat else global_body
+        h = gb(h, p["global"])
+        return h, None
+
+    x, _ = jax.lax.scan(super_block, x, params["super"])
+    def tail_body(hh, pp):
+        return _attn_layer(hh, pp, cfg, freqs_l, positions, causal=True,
+                           window=cfg.window), None
+    tb = _ckpt(tail_body) if remat else tail_body
+    x, _ = jax.lax.scan(tb, x, params["tail"])
+    return x
+
+
+def _run_recurrentgemma(x, params, cfg: ModelConfig, freqs, positions,
+                        remat: bool):
+    """8×(rec, rec, attn) + 2 rec."""
+    def super_block(h, p):
+        h, _ = _rec_layer(h, p["rec1"], cfg)
+        h, _ = _rec_layer(h, p["rec2"], cfg)
+        h = _attn_layer(h, p["attn"], cfg, freqs, positions, causal=True,
+                        window=cfg.window)
+        return h, None
+
+    sb = _ckpt(super_block) if remat else super_block
+    x, _ = jax.lax.scan(sb, x, params["super"])
+
+    def tail(h, p):
+        h, _ = _rec_layer(h, p, cfg)
+        return h, None
+    tl = _ckpt(tail) if remat else tail
+    x, _ = jax.lax.scan(tl, x, params["tail"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- params ----------------
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        k_emb, k_layers, k_enc, k_tail = jax.random.split(rng, 4)
+        params: dict = {
+            "embed": L._init(k_emb, (cfg.vocab, cfg.d_model), scale_axis=1),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if cfg.family in ("dense", "moe", "vlm") and cfg.hybrid is None:
+            params["blocks"] = _stack(
+                k_layers, cfg.n_layers,
+                lambda k: _layer_params(k, cfg, "attn"))
+        elif cfg.name.startswith("gemma3"):
+            n_super = (cfg.n_layers - len(cfg.hybrid.tail)) // 6
+            params["super"] = _stack(k_layers, n_super, lambda k: {
+                "local": _stack(jax.random.fold_in(k, 0), 5,
+                                lambda kk: _layer_params(kk, cfg, "local")),
+                "global": _layer_params(jax.random.fold_in(k, 1), cfg, "global"),
+            })
+            params["tail"] = _stack(k_tail, len(cfg.hybrid.tail),
+                                    lambda k: _layer_params(k, cfg, "local"))
+        elif cfg.family == "hybrid":
+            n_super = (cfg.n_layers - len(cfg.hybrid.tail)) // 3
+            params["super"] = _stack(k_layers, n_super, lambda k: {
+                "rec1": _layer_params(jax.random.fold_in(k, 0), cfg, "rec"),
+                "rec2": _layer_params(jax.random.fold_in(k, 1), cfg, "rec"),
+                "attn": _layer_params(jax.random.fold_in(k, 2), cfg, "attn"),
+            })
+            params["tail"] = _stack(k_tail, len(cfg.hybrid.tail),
+                                    lambda k: _layer_params(k, cfg, "rec"))
+        elif cfg.family == "ssm":
+            params["blocks"] = _stack(k_layers, cfg.n_layers,
+                                      lambda k: _layer_params(k, cfg, "ssm"))
+        elif cfg.family == "encdec":
+            params["enc_blocks"] = _stack(
+                k_enc, cfg.enc_layers, lambda k: _layer_params(k, cfg, "attn"))
+            params["blocks"] = _stack(
+                k_layers, cfg.n_layers,
+                lambda k: _layer_params(k, cfg, "cross"))
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    # ---------------- forward (train / prefill hidden states) ----------------
+    def hidden_states(self, params: PyTree, tokens: jax.Array,
+                      enc_frames: Optional[jax.Array] = None,
+                      remat: bool = True) -> jax.Array:
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = L.embed(tokens, params["embed"])
+        positions = jnp.arange(s)
+        freqs = L.rope_freqs(cfg)
+        if cfg.family == "encdec":
+            assert enc_frames is not None, "encdec needs encoder frames"
+            enc = enc_frames.astype(L.COMPUTE_DTYPE) + _sinusoid(
+                cfg.enc_seq, cfg.d_model)
+            enc = _run_uniform(enc, params["enc_blocks"], cfg, None,
+                               jnp.arange(cfg.enc_seq), "enc", remat)
+            enc = L.rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+            x = x + _sinusoid(s, cfg.d_model)
+
+            def body(h, p):
+                return _attn_layer(h, p, cfg, None, positions, causal=True,
+                                   kv_override=(enc, enc)), None
+            fn = _ckpt(body) if remat else body
+            x, _ = jax.lax.scan(fn, x, params["blocks"])
+        elif cfg.name.startswith("gemma3"):
+            x = _run_gemma3(x, params, cfg, freqs, freqs, positions, remat)
+        elif cfg.family == "hybrid":
+            x = _run_recurrentgemma(x, params, cfg, freqs, positions, remat)
+        elif cfg.family == "ssm":
+            x = _run_uniform(x, params["blocks"], cfg, None, positions,
+                             "ssm", remat)
+        else:
+            x = _run_uniform(x, params["blocks"], cfg, freqs, positions,
+                             "attn", remat, window=cfg.window)
+        return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params: PyTree, batch: dict) -> jax.Array:
+        x = self.hidden_states(params, batch["tokens"],
+                               batch.get("enc_frames"))
+        return L.unembed_loss(x, params["embed"], batch["labels"])
+
+    # ---------------- decode ----------------
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        """Zeroed decode caches sized for ``max_len`` context."""
+        cfg = self.cfg
+        hd, nk = cfg.head_dim, max(cfg.n_kv_heads, 1)
+        dt = L.COMPUTE_DTYPE
+
+        def kv(n_layers, length):
+            shape = (n_layers, batch, length, nk, hd)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+        if cfg.family == "ssm":
+            s = cfg.ssm
+            d_in = cfg.d_model * s.expand
+            nh = d_in // s.head_dim
+            conv_c = d_in + 2 * s.d_state
+            return {
+                "state": jnp.zeros((cfg.n_layers, batch, nh, s.head_dim,
+                                    s.d_state), dt),
+                "conv": jnp.zeros((cfg.n_layers, batch, s.d_conv - 1,
+                                   conv_c), dt),
+            }
+        if cfg.name.startswith("gemma3"):
+            n_super = (cfg.n_layers - 2) // 6
+            win = min(cfg.window, max_len)
+            return {
+                "local": kv(n_super * 5 + 2, win),
+                "global": kv(n_super, max_len),
+            }
+        if cfg.family == "hybrid":
+            n_super = (cfg.n_layers - 2) // 3
+            dr = cfg.d_model
+            win = min(cfg.window, max_len) if cfg.window else max_len
+            return {
+                "attn": kv(n_super, win),
+                "h": jnp.zeros((n_super * 2 + 2, batch, dr), dt),
+                "conv": jnp.zeros((n_super * 2 + 2, batch, 3, dr), dt),
+            }
+        if cfg.family == "encdec":
+            return {
+                "self": kv(cfg.n_layers, max_len),
+                "cross": kv(cfg.n_layers, cfg.enc_seq),
+                "cross_ready": jnp.zeros((), jnp.int32),
+            }
+        return {"self": kv(cfg.n_layers, max_len)}
+
+    def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,
+                    pos: jax.Array) -> tuple[jax.Array, PyTree]:
+        """One token for the whole batch.  tokens: (B,), pos: scalar.
+        Returns (logits (B, V), new cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(L.COMPUTE_DTYPE)
+        freqs = L.rope_freqs(cfg)
+
+        def attn_step(h, p, kc, vc, cache_pos):
+            hn = L.rms_norm(h[:, None], p["ln1"], cfg.norm_eps)[:, 0]
+            y, kc, vc = attn.attention_decode_block(
+                hn, p["attn"], cfg, freqs, pos, kc, vc, cache_pos)
+            h = h + y
+            hn = L.rms_norm(h[:, None], p["ln2"], cfg.norm_eps)[:, 0]
+            if cfg.moe:
+                h = h + moe_mod.moe_decode(hn, p["ffn"], cfg)
+            elif "payload_gate" in p["ffn"]:
+                h = h + L.sparse_mlp_decode(hn, p["ffn"])
+            else:
+                h = h + L.mlp(hn[:, None], p["ffn"])[:, 0]
+            return h, kc, vc
+
+        if cfg.family == "ssm":
+            def body(h, sl):
+                p, st, cv = sl
+                hn = L.rms_norm(h[:, None], p["ln1"], cfg.norm_eps)[:, 0]
+                y, st, cv = ssm_mod.ssm_decode(hn, p["ssm"], cfg, st, cv)
+                return h + y, (st, cv)
+            x, (st, cv) = jax.lax.scan(
+                body, x, (params["blocks"], cache["state"], cache["conv"]))
+            cache = {"state": st, "conv": cv}
+        elif cfg.name.startswith("gemma3"):
+            win = cache["local"]["k"].shape[2]
+            lpos = jnp.where(win > 0, pos % win, 0)
+            n_super = cache["global"]["k"].shape[0]
+
+            def super_body(h, sl):
+                p, lk, lv, gk, gv = sl
+
+                def local_body(hh, inner):
+                    pp, kk, vv = inner
+                    hh, kk, vv = attn_step(hh, pp, kk, vv, lpos)
+                    return hh, (kk, vv)
+                h, (lk, lv) = jax.lax.scan(
+                    local_body, h, (p["local"], lk, lv))
+                h, gk, gv = attn_step(h, p["global"], gk, gv, pos)
+                return h, (lk, lv, gk, gv)
+
+            lk5 = cache["local"]["k"][: n_super * 5].reshape(
+                (n_super, 5) + cache["local"]["k"].shape[1:])
+            lv5 = cache["local"]["v"][: n_super * 5].reshape(
+                (n_super, 5) + cache["local"]["v"].shape[1:])
+            x, (lk5, lv5, gk, gv) = jax.lax.scan(
+                super_body, x,
+                (params["super"], lk5, lv5,
+                 cache["global"]["k"], cache["global"]["v"]))
+
+            def tail_body(h, sl):
+                p, kk, vv = sl
+                h, kk, vv = attn_step(h, p, kk, vv, lpos)
+                return h, (kk, vv)
+            tk = cache["local"]["k"][n_super * 5:]
+            tv = cache["local"]["v"][n_super * 5:]
+            x, (tk, tv) = jax.lax.scan(tail_body, x, (params["tail"], tk, tv))
+            cache = {
+                "local": {
+                    "k": jnp.concatenate(
+                        [lk5.reshape((-1,) + lk5.shape[2:]), tk]),
+                    "v": jnp.concatenate(
+                        [lv5.reshape((-1,) + lv5.shape[2:]), tv])},
+                "global": {"k": gk, "v": gv},
+            }
+        elif cfg.family == "hybrid":
+            win = cache["attn"]["k"].shape[2]
+            apos = pos % win
+            n_super = cache["attn"]["k"].shape[0]
+
+            def rec_step(h, p, hs, cv):
+                hn = L.rms_norm(h[:, None], p["ln1"], cfg.norm_eps)[:, 0]
+                y, hs, cv = rg.rglru_decode(hn, p["rec"], cfg, hs, cv)
+                h = h + y
+                hn = L.rms_norm(h[:, None], p["ln2"], cfg.norm_eps)[:, 0]
+                return h + L.mlp(hn[:, None], p["ffn"])[:, 0], hs, cv
+
+            def super_body(h, sl):
+                p, kk, vv, h1, c1, h2, c2 = sl
+                h, h1, c1 = rec_step(h, p["rec1"], h1, c1)
+                h, h2, c2 = rec_step(h, p["rec2"], h2, c2)
+                h, kk, vv = attn_step(h, p["attn"], kk, vv, apos)
+                return h, (kk, vv, h1, c1, h2, c2)
+
+            hs = cache["h"][: 2 * n_super].reshape(
+                (n_super, 2) + cache["h"].shape[1:])
+            cv = cache["conv"][: 2 * n_super].reshape(
+                (n_super, 2) + cache["conv"].shape[1:])
+            x, (kk, vv, h1, c1, h2, c2) = jax.lax.scan(
+                super_body, x,
+                (params["super"], cache["attn"]["k"], cache["attn"]["v"],
+                 hs[:, 0], cv[:, 0], hs[:, 1], cv[:, 1]))
+
+            def tail_body(h, sl):
+                p, hh, cc = sl
+                h, hh, cc = rec_step(h, p, hh, cc)
+                return h, (hh, cc)
+            x, (th, tc) = jax.lax.scan(
+                tail_body, x, (params["tail"], cache["h"][2 * n_super:],
+                               cache["conv"][2 * n_super:]))
+            new_h = jnp.concatenate(
+                [jnp.stack([h1, h2], 1).reshape((-1,) + h1.shape[1:]), th])
+            new_c = jnp.concatenate(
+                [jnp.stack([c1, c2], 1).reshape((-1,) + c1.shape[1:]), tc])
+            cache = {"attn": {"k": kk, "v": vv}, "h": new_h, "conv": new_c}
+        elif cfg.family == "encdec":
+            def body(h, sl):
+                p, kk, vv, ck, cv = sl
+                hn = L.rms_norm(h[:, None], p["ln1"], cfg.norm_eps)[:, 0]
+                y, kk, vv = attn.attention_decode_block(
+                    hn, p["attn"], cfg, freqs, pos, kk, vv, pos)
+                h = h + y
+                hn = L.rms_norm(h[:, None], p["ln3"], cfg.norm_eps)[:, 0]
+                rep = cfg.n_heads // max(cfg.n_kv_heads, 1)
+                q = jnp.einsum("bd,de->be", hn,
+                               p["cross"]["wq"].astype(L.COMPUTE_DTYPE))
+                q = q.reshape(-1, cfg.n_heads, cfg.head_dim)
+                y = attn.decode_attention(
+                    q, attn._repeat_kv(ck, rep), attn._repeat_kv(cv, rep),
+                    ck.shape[1])
+                h = h + jnp.einsum(
+                    "be,ed->bd", y.reshape(y.shape[0], -1),
+                    p["cross"]["wo"].astype(L.COMPUTE_DTYPE))
+                hn = L.rms_norm(h[:, None], p["ln2"], cfg.norm_eps)[:, 0]
+                h = h + L.mlp(hn[:, None], p["ffn"])[:, 0]
+                return h, (kk, vv)
+            x, (kk, vv) = jax.lax.scan(
+                body, x, (params["blocks"], cache["self"]["k"],
+                          cache["self"]["v"], cache["cross"]["k"],
+                          cache["cross"]["v"]))
+            cache = dict(cache)
+            cache["self"] = {"k": kk, "v": vv}
+        else:
+            def body(h, sl):
+                p, kk, vv = sl
+                cache_pos = pos % kk.shape[1] if cfg.window else pos
+                h, kk, vv = attn_step(h, p, kk, vv, cache_pos)
+                return h, (kk, vv)
+            x, (kk, vv) = jax.lax.scan(
+                body, x, (params["blocks"], cache["self"]["k"],
+                          cache["self"]["v"]))
+            cache = {"self": {"k": kk, "v": vv}}
+
+        x = L.rms_norm(x[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
+        return L.logits_head(x, params["embed"]), cache
+
+
+def _sinusoid(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe[None].astype(L.COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation) — dry-run fodder
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """Abstract inputs for one (arch × shape) cell.
+
+    train/prefill: token + label batches (+ stub frontend embeddings);
+    decode: one-token batch + position.  The KV cache itself is produced by
+    ``Model.init_cache`` shapes via eval_shape (no allocation).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        out = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": tok}
+        if cfg.family == "encdec":
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,55 @@
+"""Weight pruning + activation-sparsity measurement.
+
+Produces the sparse tensors that SnipSnap's formats compress: unstructured
+magnitude pruning, N:M structured pruning, and block pruning (MXU-aligned —
+the TPU-executable granularity).  ``activation_density`` measures realized
+activation sparsity (ReLU-style zeros) to feed the Sparsity Analyzer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def magnitude_prune(w: jax.Array, density: float) -> jax.Array:
+    """Keep the top-|density| fraction by magnitude (unstructured)."""
+    flat = jnp.abs(w).ravel()
+    k = max(int(flat.size * density), 1)
+    thresh = jnp.sort(flat)[-k]
+    return jnp.where(jnp.abs(w) >= thresh, w, 0)
+
+
+def nm_prune(w: jax.Array, n_sel: int = 2, m_group: int = 4) -> jax.Array:
+    """N:M structured pruning along axis 0 (the contraction dim)."""
+    n, k = w.shape
+    assert n % m_group == 0
+    wg = w.reshape(n // m_group, m_group, k)
+    order = jnp.argsort(-jnp.abs(wg), axis=1)
+    ranks = jnp.argsort(order, axis=1)
+    return jnp.where(ranks < n_sel, wg, 0).reshape(n, k)
+
+
+def block_prune(w: jax.Array, bn: int, bk: int, density: float) -> jax.Array:
+    """Keep the top-|density| fraction of (bn × bk) blocks by Frobenius
+    norm — MXU-aligned block sparsity, directly executable by
+    ``kernels.bitmap_spmm``."""
+    n, k = w.shape
+    assert n % bn == 0 and k % bk == 0
+    gn, gk = n // bn, k // bk
+    wb = w.reshape(gn, bn, gk, bk)
+    norms = jnp.sqrt(jnp.sum(jnp.square(wb), axis=(1, 3)))   # (gn, gk)
+    nkeep = max(int(gn * gk * density), 1)
+    thresh = jnp.sort(norms.ravel())[-nkeep]
+    mask = (norms >= thresh)[:, None, :, None]
+    return (wb * mask).reshape(n, k)
+
+
+def activation_density(x: jax.Array, atol: float = 0.0) -> float:
+    """Fraction of non-zeros (|x| > atol) — feeds TensorSpec densities."""
+    return float(jnp.mean(jnp.abs(x) > atol))
+
+
+def density(w) -> float:
+    return float(np.mean(np.asarray(w) != 0))

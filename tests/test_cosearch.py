@@ -1,0 +1,88 @@
+"""Progressive co-search + baseline workflow tests (§III-D, Table I)."""
+
+import pytest
+
+from repro.core.arch import ARCH2, ARCH3
+from repro.core.baselines import dimo_like_search, stepwise_search
+from repro.core.cosearch import CoSearchConfig, cosearch, cosearch_multi
+from repro.core.engine import EngineConfig
+from repro.core.sparsity import Bernoulli
+from repro.core.workload import LLMSpec, MatMul, Workload, build_llm
+
+
+TINY = LLMSpec("tiny", layers=2, d_model=256, d_ff=1024, heads=4)
+FAST = CoSearchConfig(engine=EngineConfig(max_levels=2, max_allocs_per_pattern=16),
+                      spatial_top=2, max_pairs=6)
+
+
+def _wl():
+    return build_llm(TINY, seq=128, decode_tokens=8,
+                     act_density=0.4, w_density=0.25)
+
+
+def test_cosearch_fixed_mode_runs():
+    res = cosearch(_wl(), ARCH3, FAST, fixed_formats=("Bitmap", "Bitmap"))
+    assert res.design.energy > 0 and res.design.cycles > 0
+    assert len(res.design.ops) == len(_wl().ops)
+    assert res.evaluations > 0
+
+
+def test_cosearch_search_beats_or_matches_fixed():
+    """Format search must never lose to the best preset format (it can
+    always fall back to it)."""
+    wl = _wl()
+    searched = cosearch(wl, ARCH3, FAST)
+    fixed_best = min(
+        cosearch(wl, ARCH3, FAST, fixed_formats=(f, f)).design.metric("edp")
+        for f in ("Bitmap", "RLE"))
+    assert searched.design.metric("edp") <= fixed_best * 1.001
+
+
+def test_cosearch_dense_workload_picks_no_format():
+    wl = build_llm(TINY, seq=128, act_density=1.0, w_density=1.0)
+    res = cosearch(wl, ARCH3, FAST)
+    assert res.design.pattern_i is None and res.design.pattern_w is None
+
+
+def test_compression_reduces_memory_energy_vs_dense():
+    wl = _wl()
+    comp = cosearch(wl, ARCH3, FAST, fixed_formats=("Bitmap", "Bitmap"))
+    dense = cosearch(wl, ARCH3, FAST, fixed_formats=(None, None))
+    assert comp.design.memory_energy < dense.design.memory_energy
+
+
+def test_stepwise_matches_quality_but_costs_more_models():
+    """The Table-I claim: same cost model, same fixed format — the stepwise
+    workflow needs strictly more model evaluations than progressive."""
+    wl = _wl()
+    prog = cosearch(wl, ARCH3, FAST, fixed_formats=("Bitmap", "Bitmap"))
+    step = stepwise_search(wl, ARCH3, FAST, fixed_formats=("Bitmap", "Bitmap"))
+    assert step.evaluations > prog.evaluations
+    # quality parity within a small factor (stepwise shortlists can miss)
+    assert step.design.metric("edp") >= prog.design.metric("edp") * 0.95
+
+
+def test_stepwise_search_mode_has_budget():
+    wl = Workload("one", (MatMul("m", 64, 96, 64,
+                                 Bernoulli(0.5), Bernoulli(0.3)),))
+    res = stepwise_search(wl, ARCH2, FAST, search_formats=True,
+                          budget_s_per_op=0.5)
+    assert res.design.energy > 0
+
+
+def test_dimo_like_search_runs():
+    wl = _wl()
+    res = dimo_like_search(wl, ARCH3, FAST, restarts=2, iters=20)
+    assert res.design.energy > 0
+    assert res.evaluations >= 2 * len(wl.ops)
+
+
+def test_multi_model_importance_selection():
+    wl_a = build_llm(LLMSpec("A", 2, 256, 1024, 4), seq=64,
+                     act_density=0.2, w_density=0.2)
+    wl_b = build_llm(LLMSpec("B", 2, 256, 1024, 4), seq=64,
+                     act_density=0.8, w_density=0.8)
+    designs, key, val = cosearch_multi(
+        [wl_a, wl_b], ARCH3, importance={"A": 99.0, "B": 1.0}, cfg=FAST)
+    assert set(designs) == {"A", "B"}
+    assert val > 0

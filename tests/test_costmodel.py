@@ -1,0 +1,117 @@
+"""Cost model + dataflow sanity tests: the model must reproduce the paper's
+qualitative mechanisms before any search runs on top of it."""
+
+import pytest
+
+from repro.core import formats as F
+from repro.core.arch import ARCH1, ARCH2, ARCH3, TPUV5E
+from repro.core.costmodel import compile_format, dense_format, evaluate, memory_energy
+from repro.core.dataflow import (Mapping, ORDERS, enumerate_mappings,
+                                 irrelevant_refetch, spatial_candidates,
+                                 tile_fits)
+from repro.core.formats import Format, Level
+from repro.core.primitives import Prim
+from repro.core.sparsity import Bernoulli, TensorSpec
+from repro.core.workload import MatMul
+
+
+OP = MatMul("fc", M=256, N=512, K=256, sp_i=Bernoulli(0.5), sp_w=Bernoulli(0.3))
+
+
+def _cf(op, fmt_i=None, fmt_w=None):
+    spec_i = TensorSpec(op.i_dims(), op.sp_i)
+    spec_w = TensorSpec(op.w_dims(), op.sp_w)
+    cf_i = compile_format(fmt_i, spec_i) if fmt_i else dense_format(spec_i)
+    cf_w = compile_format(fmt_w, spec_w) if fmt_w else dense_format(spec_w)
+    return cf_i, cf_w
+
+
+def _some_mapping(op, arch):
+    return next(iter(enumerate_mappings(op, arch)))
+
+
+def test_irrelevant_refetch_rule():
+    bounds = {"M": 4, "N": 8, "K": 2}
+    # I relevant to (M,N); with K innermost no refetch, K outermost → ×2.
+    assert irrelevant_refetch(("M", "N", "K"), "I", bounds) == 1.0
+    assert irrelevant_refetch(("K", "M", "N"), "I", bounds) == 2.0
+    # O relevant to (M,K); N outer to K → refetch by N bound.
+    assert irrelevant_refetch(("N", "M", "K"), "O", bounds) == 8.0
+    assert irrelevant_refetch(("M", "K", "N"), "O", bounds) == 1.0
+
+
+def test_compression_reduces_dram_energy():
+    m = _some_mapping(OP, ARCH3)
+    dense_i, dense_w = _cf(OP)
+    comp_i, comp_w = _cf(OP, F.bitmap(OP.i_dims()), F.bitmap(OP.w_dims()))
+    r_dense = evaluate(OP, ARCH3, m, dense_i, dense_w)
+    r_comp = evaluate(OP, ARCH3, m, comp_i, comp_w)
+    assert r_comp.breakdown["dram"] < r_dense.breakdown["dram"]
+
+
+def test_skipping_beats_gating_on_cycles():
+    m = _some_mapping(OP, ARCH1)
+    cfs = _cf(OP, F.bitmap(OP.i_dims()), F.bitmap(OP.w_dims()))
+    r_gate = evaluate(OP, ARCH1, m, *cfs)     # Arch1 = gating I→W
+    r_skip = evaluate(OP, ARCH2, m, *cfs)     # Arch2 = skipping I→W
+    assert r_skip.breakdown["compute_cycles"] < r_gate.breakdown["compute_cycles"]
+    # gating still saves MAC energy
+    dense = evaluate(OP, ARCH1, m, *_cf(OP))
+    assert r_gate.breakdown["mac"] == pytest.approx(dense.breakdown["mac"])
+
+
+def test_aligned_allocation_cheaper_than_oversized_blocks():
+    """Efficiency-oriented allocating (§III-C2): level sizes matching the
+    tile factors must not cost more than a mismatched allocation whose block
+    exceeds the tile."""
+    op = MatMul("p", M=64, N=96, K=64, sp_w=Bernoulli(0.2))
+    spec_w = TensorSpec(op.w_dims(), op.sp_w)
+    tile = {"M": 64, "N": 32, "K": 64}
+    sp = {"M": 8, "N": 1, "K": 8}
+    m = Mapping(spatial=sp, tile=tile, order=("M", "N", "K"))
+    aligned = Format.of(Level(Prim.B, "N", 3), Level(Prim.NONE, "N", 32),
+                        Level(Prim.NONE, "K", 64))
+    oversized = Format.of(Level(Prim.B, "N", 2), Level(Prim.NONE, "N", 48),
+                          Level(Prim.NONE, "K", 64))
+    cf_i = dense_format(TensorSpec(op.i_dims(), op.sp_i))
+    r_aligned = evaluate(op, ARCH3, m, cf_i, compile_format(aligned, spec_w))
+    r_oversized = evaluate(op, ARCH3, m, cf_i, compile_format(oversized, spec_w))
+    # blocks of 48 fetched into tiles of 32 over-fetch by 1.5×
+    assert r_aligned.dram_bits < r_oversized.dram_bits
+
+
+def test_rle_has_no_random_access():
+    op = MatMul("p", M=64, N=64, K=64, sp_w=Bernoulli(0.2))
+    spec_w = TensorSpec(op.w_dims(), op.sp_w)
+    cf = compile_format(F.rle(op.w_dims()), spec_w)
+    # fetching a half-row tile still decodes the whole K run-chain
+    whole = cf.fetched_bits({"N": 64, "K": 64})
+    half = cf.fetched_bits({"N": 64, "K": 32})
+    assert half > whole / 2 * 1.5
+
+
+def test_compression_aware_allocation_admits_larger_tiles():
+    """§III-D2: compressed tile sizes make previously-illegal tilings legal."""
+    op = MatMul("big", M=2048, N=2048, K=2048)
+    tile = {"M": 512, "N": 1024, "K": 32}
+    assert not tile_fits(op, tile, ARCH1, ratio_i=1.0, ratio_w=1.0)
+    assert tile_fits(op, tile, ARCH1, ratio_i=0.1, ratio_w=0.1)
+
+
+def test_spatial_candidates_respect_budget():
+    for sp in spatial_candidates(OP, ARCH3):
+        assert sp["M"] * sp["N"] * sp["K"] <= ARCH3.macs
+
+
+def test_enumerate_mappings_nonempty_all_archs():
+    for arch in (ARCH1, ARCH2, ARCH3, TPUV5E):
+        assert _some_mapping(OP, arch) is not None
+
+
+def test_memory_energy_components():
+    m = _some_mapping(OP, ARCH3)
+    r = evaluate(OP, ARCH3, m, *_cf(OP))
+    # memory energy = hierarchy traffic (DRAM + GLB); RF is datapath-side
+    assert memory_energy(r) == pytest.approx(
+        r.breakdown["dram"] + r.breakdown["glb"])
+    assert r.energy > memory_energy(r)

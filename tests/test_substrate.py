@@ -1,0 +1,208 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, fault handling,
+pruning, codesign bridge."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core.codesign import plan_for_model
+from repro.core.cosearch import CoSearchConfig
+from repro.core.engine import EngineConfig
+from repro.core.sparsity import NM, Bernoulli
+from repro.configs import get_config
+from repro.data.pipeline import PipelineState, TokenPipeline
+from repro.optim import adamw
+from repro.runtime import fault
+from repro.sparse import masks
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    p = TokenPipeline(vocab=101, seq_len=16, global_batch=4)
+    b1 = p.batch_at(5)
+    b2 = p.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # resuming from a checkpointed state replays the same stream
+    it = p.iterate(PipelineState(3))
+    st, batch = next(it)
+    np.testing.assert_array_equal(batch["tokens"], p.batch_at(3)["tokens"])
+    assert st.step == 4
+
+
+def test_pipeline_shards_disjoint_and_elastic():
+    p = TokenPipeline(vocab=101, seq_len=8, global_batch=8, n_hosts=2,
+                      host_id=0)
+    q = p.reshard(2, 1)
+    b0, b1 = p.batch_at(0), q.batch_at(0)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_pipeline_labels_shifted():
+    p = TokenPipeline(vocab=101, seq_len=16, global_batch=2)
+    b = p.batch_at(0)
+    # labels are next tokens — mostly the affine map of tokens
+    nxt = (np.asarray(b["tokens"]) * 31 + 7) % 101
+    match = np.mean(nxt == np.asarray(b["labels"]))
+    assert match > 0.7
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    return {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+
+
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                            weight_decay=0.0)
+    params = _toy_params()
+    state = adamw.init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - 2.0)) + jnp.sum(jnp.square(p["b"]))
+
+    l0 = loss(params)
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = adamw.apply(params, g, state, cfg)
+    assert loss(params) < l0 * 0.1
+
+
+def test_adamw_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert adamw.schedule(jnp.asarray(5), cfg) == pytest.approx(0.5)
+    assert adamw.schedule(jnp.asarray(10), cfg) == pytest.approx(1.0)
+    assert adamw.schedule(jnp.asarray(100), cfg) == pytest.approx(
+        cfg.lr * cfg.min_lr_frac)
+
+
+def test_grad_compression_error_feedback_converges():
+    cfg = adamw.AdamWConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                            weight_decay=0.0, grad_compress=True)
+    params = _toy_params()
+    state = adamw.init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - 1.5))
+
+    for _ in range(80):
+        g = jax.grad(loss)(params)
+        params, state = adamw.apply(params, g, state, cfg)
+    assert float(loss(params)) < 0.05
+    assert state.err is not None
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    ckpt.save(str(tmp_path), 3, tree, extra={"pipeline": {"step": 3}})
+    ckpt.save(str(tmp_path), 7, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, extra = ckpt.restore(str(tmp_path), like, step=3)
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert extra["pipeline"]["step"] == 3
+
+
+def test_checkpoint_prune_old(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree)
+    ckpt.prune_old(str(tmp_path), keep=2)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000003", "step_00000004"]
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": jnp.zeros((2, 2))})
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), {"x": jnp.zeros((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_step_guard_retries_then_restores():
+    calls = {"n": 0, "restored": False}
+
+    def flaky():
+        calls["n"] += 1
+        raise RuntimeError("device lost")
+
+    g = fault.StepGuard(max_retries=2,
+                        on_restore=lambda: calls.__setitem__("restored", True))
+    out = g.run(10, flaky)
+    assert out is None and calls["n"] == 3 and calls["restored"]
+    assert [e.action for e in g.events] == ["retry", "retry", "restore"]
+
+
+def test_straggler_monitor_flags_spikes():
+    m = fault.StragglerMonitor(warmup=3)
+    for i in range(10):
+        assert not m.observe(i, 1.0)
+    assert m.observe(10, 5.0)          # 5× slower than EWMA
+    assert m.flagged
+
+
+def test_elastic_remesh_preserves_tp():
+    assert fault.elastic_remesh(240, 16) == (15, 16)
+    assert fault.elastic_remesh(512, 16, pod_size=256) == (2, 16, 16)
+    # losing one pod's worth of nodes
+    assert fault.elastic_remesh(384, 16, pod_size=256) == (1, 24, 16)
+    with pytest.raises(ValueError):
+        fault.elastic_remesh(8, 16)
+
+
+def test_replay_range():
+    assert list(fault.replay_steps(100, 103)) == [100, 101, 102]
+
+
+# ---------------------------------------------------------------------------
+# pruning + codesign
+# ---------------------------------------------------------------------------
+
+def test_prune_densities():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    assert masks.density(masks.magnitude_prune(w, 0.3)) == pytest.approx(0.3, abs=0.02)
+    assert masks.density(masks.nm_prune(w)) == pytest.approx(0.5, abs=0.01)
+    assert masks.density(masks.block_prune(w, 16, 16, 0.25)) == pytest.approx(
+        0.25, abs=0.05)
+
+
+def test_codesign_plan_nm():
+    cfg = get_config("deepseek-coder-33b").reduced()
+    plan = plan_for_model(cfg, NM(2, 4), tokens=256,
+                          search_cfg=CoSearchConfig(
+                              engine=EngineConfig(max_levels=2,
+                                                  max_allocs_per_pattern=8),
+                              spatial_top=2, max_pairs=4))
+    assert plan.for_op("ffn.up").kind == "nm"
+
+
+def test_codesign_plan_block_sparse_maps_to_bitmap_kernel():
+    cfg = get_config("deepseek-coder-33b").reduced()
+    plan = plan_for_model(cfg, Bernoulli(0.15), tokens=256,
+                          search_cfg=CoSearchConfig(
+                              engine=EngineConfig(max_levels=2,
+                                                  max_allocs_per_pattern=16),
+                              spatial_top=2, max_pairs=6))
+    ch = plan.for_op("ffn.up")
+    assert ch.kind in ("bitmap", "dense")
+    if ch.kind == "bitmap":
+        assert cfg.d_model % ch.block_n == 0 or ch.block_n % 8 == 0
