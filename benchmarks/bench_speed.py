@@ -11,9 +11,12 @@ ratios here, plus the evaluation-count ratio which is machine-independent.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import memo
 from repro.core.arch import ALL_ARCHS
 from repro.core.baselines import stepwise_search
 from repro.core.cosearch import CoSearchConfig, cosearch
@@ -30,7 +33,37 @@ CFG = CoSearchConfig(objective="edp",
                      spatial_top=2, max_pairs=8)
 
 
+def run_evaluator_comparison() -> None:
+    """Old-vs-new evaluator: the seed scalar path (per-candidate evaluate,
+    all caches bypassed) against the batch path (evaluate_batch + the memo
+    caches, cold start).  Same candidates, same results — the ratio is pure
+    evaluator/caching engineering."""
+    s_t, s_e = [], []
+    scalar_cfg = dataclasses.replace(CFG, use_batch=False)
+    for name, mode in (("LLaMA2-7B", "fixed"), ("LLaMA2-7B", "search"),
+                       ("OPT-6.7B", "fixed")):
+        wl = build_llm(MODELS[name], seq=2048, decode_tokens=128,
+                       act_density=0.75, w_density=0.75)
+        fixed = ("Bitmap", "Bitmap") if mode == "fixed" else None
+        with memo.disabled():
+            old = cosearch(wl, ALL_ARCHS[2], scalar_cfg, fixed_formats=fixed)
+        memo.clear()                     # cold caches: honest new-path time
+        new = cosearch(wl, ALL_ARCHS[2], CFG, fixed_formats=fixed)
+        tr = old.runtime_s / max(new.runtime_s, 1e-9)
+        s_t.append(tr)
+        s_e.append(new.evaluations / max(new.runtime_s, 1e-9))
+        assert new.design.edp == old.design.edp, "batch path changed results"
+        emit(f"evaluator_{mode}_Arch3_{name}", new.runtime_s * 1e6,
+             f"scalar/batch time={tr:.1f}x "
+             f"old={old.evaluations / max(old.runtime_s, 1e-9):.0f}ev/s "
+             f"new={new.evaluations / max(new.runtime_s, 1e-9):.0f}ev/s")
+    emit("evaluator_avg", 0.0,
+         f"batch+caches speedup={np.mean(s_t):.1f}x "
+         f"throughput={np.mean(s_e):.0f}ev/s (target >=5x)")
+
+
 def run() -> None:
+    run_evaluator_comparison()
     t_ratios, e_ratios = [], []
     for arch in ALL_ARCHS:
         for name, spec in MODELS.items():

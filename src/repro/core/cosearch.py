@@ -17,6 +17,15 @@ pass, with no post-hoc correction loops:
 One compression pattern is selected per operand role for the whole workload
 (hardware ships a single format decoder); dimension allocations follow each
 operator's own tiling.
+
+Hot-loop structure: per (op, pattern pair), the mapping space comes from the
+memoized :func:`repro.core.dataflow.mappings_for`, mapping-derived
+allocations are deduplicated per (tile, spatial) factor tuple (loop order
+does not enter the allocation), and the whole candidate set is scored in
+one :func:`repro.core.costmodel.evaluate_batch` call.  Whole `_search_op`
+results are memoized by (op shape+sparsity+count, arch, candidate pair,
+config) so identical layers are searched once across pairs and models; see
+:mod:`repro.core.memo` for the cache registry and key conventions.
 """
 
 from __future__ import annotations
@@ -26,10 +35,14 @@ import math
 import time
 from typing import Optional, Sequence
 
+import numpy as np
+
+from repro.core import memo
 from repro.core.arch import HardwareConfig
 from repro.core.costmodel import (CompiledFormat, CostReport, compile_format,
-                                  dense_format, evaluate, memory_energy)
-from repro.core.dataflow import Mapping, enumerate_mappings
+                                  dense_format, evaluate, evaluate_batch,
+                                  format_key, memory_energy, spec_key)
+from repro.core.dataflow import Mapping, mappings_for
 from repro.core.engine import (Candidate, EngineConfig, SearchStats,
                                allocate_for_mapping, generate_candidates)
 from repro.core.formats import Format, Level, standard_formats
@@ -45,6 +58,8 @@ class CoSearchConfig:
     spatial_top: int = 3
     max_pairs: int = 12                # (fmt_i, fmt_w) combos evaluated
     compress_threshold: float = 0.999  # only compress operands sparser than this
+    use_batch: bool = True             # vectorized evaluator (False = the
+    #                                    legacy scalar loop, for benchmarks)
 
 
 @dataclasses.dataclass
@@ -144,18 +159,33 @@ def _op_format(cand: Optional[Candidate], pattern_dims: dict[str, int],
     return compile_format(fmt, spec)
 
 
+_REFERENCE_CF_CACHE: dict = memo.register({})
+
+
 def _reference_cf(cand: Optional[Candidate], spec: TensorSpec
                   ) -> Optional[CompiledFormat]:
     """Best SIZE-optimal allocation of the candidate's pattern on this op's
-    dims (the engine's reference view, independent of the mapping)."""
+    dims (the engine's reference view, independent of the mapping).
+
+    Memoized by (pattern — named format or bare levels, spec): the result
+    only depends on the candidate's compression PATTERN, not its reference
+    allocation sizes, so equal patterns across models share one compile."""
     if cand is None:
         return None
     if cand.fmt.name in ("Bitmap", "RLE", "CSR", "CSC", "COO"):
         return compile_format(standard_formats(spec.dims)[cand.fmt.name], spec)
-    from repro.core.formats import allocate
-    from repro.core.sparsity import analyze
     bare = tuple(Level(l.prim, l.dim, None) for l in cand.fmt.levels
                  if l.prim is not Prim.NONE)
+    sk = spec_key(spec)
+    return memo.get_or(_REFERENCE_CF_CACHE,
+                       None if sk is None else (bare, sk),
+                       lambda: _reference_cf_impl(bare, spec))
+
+
+def _reference_cf_impl(bare: tuple[Level, ...], spec: TensorSpec
+                       ) -> Optional[CompiledFormat]:
+    from repro.core.formats import allocate
+    from repro.core.sparsity import analyze
     best_fmt, best_bits = None, math.inf
     for fmt in allocate(bare, spec.dims, max_allocs=24):
         bits = analyze(fmt, spec).total_bits
@@ -182,6 +212,24 @@ def output_cf(cand_i: Optional[Candidate], op: MatMul
     return _reference_cf(renamed, spec_o)
 
 
+_SEARCH_OP_CACHE: dict = memo.register({})
+
+
+def _search_op_key(op: MatMul, arch: HardwareConfig,
+                   cand_i: Optional[Candidate], cand_w: Optional[Candidate],
+                   cfg: CoSearchConfig) -> Optional[tuple]:
+    """Cache key for a whole per-op search: the op's SHAPE + sparsity +
+    repeat count (its name does not enter any formula), the architecture,
+    the exact candidate pair, and the search config."""
+    key = ((op.M, op.N, op.K, op.sp_i, op.sp_w, op.sp_o, op.count,
+            op.value_bits), arch, cand_i, cand_w, cfg)
+    try:
+        hash(key)
+    except TypeError:           # unhashable sparsity model / custom config
+        return None
+    return key
+
+
 def _search_op(op: MatMul, arch: HardwareConfig,
                cand_i: Optional[Candidate], cand_w: Optional[Candidate],
                cfg: CoSearchConfig) -> tuple[Optional[OpDesign], int]:
@@ -192,11 +240,25 @@ def _search_op(op: MatMul, arch: HardwareConfig,
     and the SIZE-optimal reference (smaller, alignment-penalized by the
     cost model).  The evaluator arbitrates, which is exactly the paper's
     co-design argument made operational."""
+    key = _search_op_key(op, arch, cand_i, cand_w, cfg)
+    if memo.enabled() and key is not None and key in _SEARCH_OP_CACHE:
+        od, evals = _SEARCH_OP_CACHE[key]
+        # the cached design came from an identically-shaped op; rebind the
+        # identity (name) of THIS op
+        return (dataclasses.replace(od, op=op) if od is not None else None,
+                evals)
+    od, evals = _search_op_impl(op, arch, cand_i, cand_w, cfg)
+    if memo.enabled() and key is not None:
+        _SEARCH_OP_CACHE[key] = (od, evals)
+    return od, evals
+
+
+def _search_op_impl(op: MatMul, arch: HardwareConfig,
+                    cand_i: Optional[Candidate], cand_w: Optional[Candidate],
+                    cfg: CoSearchConfig) -> tuple[Optional[OpDesign], int]:
     spec_i = TensorSpec(op.i_dims(), op.sp_i, op.value_bits)
     spec_w = TensorSpec(op.w_dims(), op.sp_w, op.value_bits)
 
-    evals = 0
-    best: Optional[OpDesign] = None
     dense_i = dense_format(spec_i)
     dense_w = dense_format(spec_w)
     ref_i = _reference_cf(cand_i, spec_i) or dense_i
@@ -210,20 +272,71 @@ def _search_op(op: MatMul, arch: HardwareConfig,
     named = ("Bitmap", "RLE", "CSR", "CSC", "COO")
     fixed_i = cand_i is not None and cand_i.fmt.name in named
     fixed_w = cand_w is not None and cand_w.fmt.name in named
-    for mapping in enumerate_mappings(op, arch, ratio_i, ratio_w,
-                                      spatial_top=cfg.spatial_top):
-        map_i = ref_i if fixed_i else \
-            (_op_format(cand_i, op.i_dims(), mapping, spec_i) or ref_i)
-        map_w = ref_w if fixed_w else \
-            (_op_format(cand_w, op.w_dims(), mapping, spec_w) or ref_w)
-        variants = {(id(map_i), id(map_w)): (map_i, map_w),
-                    (id(ref_i), id(ref_w)): (ref_i, ref_w)}
-        for cf_i, cf_w in variants.values():
-            cost = evaluate(op, arch, mapping, cf_i, cf_w, cf_o)
-            evals += 1
-            if best is None or cost.metric(cfg.objective) < best.cost.metric(cfg.objective):
-                best = OpDesign(op, mapping, cf_i.fmt, cf_w.fmt, cost)
+
+    # The mapping-derived allocation depends only on the tile/spatial
+    # factors, never the loop order — derive once per factor tuple (6
+    # orders share each).
+    derived: dict[tuple, tuple[CompiledFormat, CompiledFormat]] = {}
+
+    cand_mappings: list[Mapping] = []
+    cand_pairs: list[tuple[CompiledFormat, CompiledFormat]] = []
+    for mapping in mappings_for(op, arch, ratio_i, ratio_w,
+                                spatial_top=cfg.spatial_top):
+        fkey = (tuple(mapping.tile.items()), tuple(mapping.spatial.items()))
+        pair = derived.get(fkey)
+        if pair is None:
+            map_i = ref_i if fixed_i else \
+                (_op_format(cand_i, op.i_dims(), mapping, spec_i) or ref_i)
+            map_w = ref_w if fixed_w else \
+                (_op_format(cand_w, op.w_dims(), mapping, spec_w) or ref_w)
+            pair = derived[fkey] = (map_i, map_w)
+        map_i, map_w = pair
+        cand_mappings.append(mapping)
+        cand_pairs.append((map_i, map_w))
+        # the reference pair competes unless the derived allocation IS the
+        # reference (compare by value — caching may or may not share objects)
+        if (format_key(map_i.fmt), format_key(map_w.fmt)) != \
+                (format_key(ref_i.fmt), format_key(ref_w.fmt)):
+            cand_mappings.append(mapping)
+            cand_pairs.append((ref_i, ref_w))
+
+    evals = len(cand_mappings)
+    if not cand_mappings:
+        return None, 0
+
+    if cfg.use_batch:
+        bc = evaluate_batch(op, arch, cand_mappings, cand_pairs, cf_o)
+        j = int(np.argmin(bc.metric(cfg.objective)))
+        cf_i, cf_w = cand_pairs[j]
+        best = OpDesign(op, cand_mappings[j], cf_i.fmt, cf_w.fmt,
+                        bc.report(j))
+        return best, evals
+
+    # legacy scalar loop (benchmark reference for the batch path)
+    best: Optional[OpDesign] = None
+    for mapping, (cf_i, cf_w) in zip(cand_mappings, cand_pairs):
+        cost = evaluate(op, arch, mapping, cf_i, cf_w, cf_o)
+        if best is None or cost.metric(cfg.objective) < best.cost.metric(cfg.objective):
+            best = OpDesign(op, mapping, cf_i.fmt, cf_w.fmt, cost)
     return best, evals
+
+
+def _dense_sentinel(cands: Sequence[Optional[Candidate]]) -> float:
+    """Finite EqData stand-in for the dense (no-format) option when ranking
+    pattern pairs.  ``math.inf / 4`` is still ``inf``, so dense-containing
+    pair sums all collapsed to ``inf`` and their relative order was
+    arbitrary; a finite sentinel above every observed EqData keeps dense
+    sides ranked last PER SIDE while part-dense pairs still order by their
+    compressed side's EqData."""
+    observed = [c.eq_data for c in cands if c is not None]
+    return 4.0 * max(observed) if observed else 1.0
+
+
+def _pair_rank(pair: tuple[Optional[Candidate], Optional[Candidate]],
+               sentinel: float) -> float:
+    ci, cw = pair
+    return ((ci.eq_data if ci is not None else sentinel) +
+            (cw.eq_data if cw is not None else sentinel))
 
 
 def _fixed_candidate(fmt_name: str, spec: TensorSpec) -> Optional[Candidate]:
@@ -260,9 +373,9 @@ def cosearch(workload: Workload, arch: HardwareConfig,
         cands_i = _role_candidates(workload, "I", cfg, stats)
         cands_w = _role_candidates(workload, "W", cfg, stats)
         pairs = [(ci, cw) for ci in cands_i for cw in cands_w]
-        # rank pairs by combined reference EqData and cap
-        pairs.sort(key=lambda p: (p[0].eq_data if p[0] else math.inf / 4) +
-                                 (p[1].eq_data if p[1] else math.inf / 4))
+        # rank pairs by combined reference EqData (finite dense sentinel) and cap
+        sentinel = _dense_sentinel(cands_i + cands_w)
+        pairs.sort(key=lambda p: _pair_rank(p, sentinel))
         # always keep the fully-dense pair as a fallback
         dense_pair = (None, None)
         pairs = pairs[: cfg.max_pairs]
@@ -314,9 +427,10 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
 
     table: dict[str, dict[tuple, float]] = {wl.name: {} for wl in workloads}
     designs: dict[tuple, dict[str, SearchResult]] = {}
+    sentinel = _dense_sentinel([c for pair in pair_keys.values()
+                                for c in pair])
     items = sorted(pair_keys.items(),
-                   key=lambda kv: (kv[1][0].eq_data if kv[1][0] else math.inf / 4)
-                   + (kv[1][1].eq_data if kv[1][1] else math.inf / 4))
+                   key=lambda kv: _pair_rank(kv[1], sentinel))
     for key, (ci, cw) in items[: cfg.max_pairs]:
         designs[key] = {}
         for wl in workloads:

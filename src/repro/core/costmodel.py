@@ -17,16 +17,33 @@ allocating) is modeled physically:
 When the dimension allocation copies the dataflow's tiling factors, every
 factor collapses to 1.0 — exactly the paper's "aligns the compression format
 with the dataflow, reducing runtime overhead".
+
+Batch evaluator architecture
+----------------------------
+The search hot loop scores thousands of (mapping, format-pair) candidates
+per op.  :func:`evaluate_batch` materializes the whole candidate set into
+structure-of-arrays form — tile/spatial extents and DRAM bounds as (n, 3)
+arrays over (M, N, K), refetch multipliers gathered from a per-loop-order
+lookup table, and each :class:`CompiledFormat` packed into a padded
+per-level row (:func:`_format_row`, value-cached) — then computes
+energy/cycles/EDP for every candidate in one vectorized NumPy pass.
+Scalar :func:`evaluate` is a thin wrapper over a batch of one, so there is
+a single source of truth for the cost formulas.  :func:`compile_format`
+results are memoized by (format levels+name, dims, sparsity, value_bits)
+via :mod:`repro.core.memo`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
+import numpy as np
+
+from repro.core import memo
 from repro.core.arch import HardwareConfig
-from repro.core.dataflow import Mapping, irrelevant_refetch
+from repro.core.dataflow import DIMS, ORDERS, Mapping, irrelevant_refetch
 from repro.core.formats import Format
 from repro.core.primitives import DECODE_COST, Prim
 from repro.core.sparsity import SizeReport, TensorSpec, analyze
@@ -86,7 +103,42 @@ class CompiledFormat:
                    for l in self.levels)
 
 
+def _sparsity_or_none(sp) -> Optional[object]:
+    try:
+        hash(sp)
+    except TypeError:
+        return None
+    return sp
+
+
+def spec_key(spec: TensorSpec) -> Optional[tuple]:
+    """Hashable cache key for a TensorSpec (None if the sparsity model is
+    unhashable — callers then skip their cache)."""
+    sp = _sparsity_or_none(spec.sparsity)
+    if sp is None:
+        return None
+    return (tuple(spec.dims.items()), sp, spec.value_bits)
+
+
+def format_key(fmt: Optional[Format]) -> tuple:
+    """Value-based hashable identity of a (possibly sized) format."""
+    if fmt is None:
+        return (None,)
+    return (fmt.name, fmt.levels)
+
+
+_COMPILE_CACHE: dict = memo.register({})
+
+
 def compile_format(fmt: Optional[Format], spec: TensorSpec) -> CompiledFormat:
+    sk = spec_key(spec)
+    key = None if sk is None else (format_key(fmt), sk)
+    return memo.get_or(_COMPILE_CACHE, key,
+                       lambda: _compile_format_impl(fmt, spec))
+
+
+def _compile_format_impl(fmt: Optional[Format], spec: TensorSpec
+                         ) -> CompiledFormat:
     if fmt is None:
         return CompiledFormat(None, spec.dense_bits, spec.dense_bits, (), {})
     report: SizeReport = analyze(fmt, spec)
@@ -148,32 +200,226 @@ class CostReport:
                 "edp": self.edp}[objective]
 
 
-def evaluate(op: MatMul, arch: HardwareConfig, mapping: Mapping,
-             cf_i: CompiledFormat, cf_w: CompiledFormat,
-             cf_o: Optional[CompiledFormat] = None) -> CostReport:
-    """Cost of running ``op`` with ``mapping`` and the given formats.
+# --- structure-of-arrays packing for the batch path ------------------------
 
-    ``cf_o``: format for the OUTPUT activation writeback (SCNN-style — the
-    output is the next operator's sparse input and leaves the chip
-    compressed).  Partial sums still move in wide precision."""
+_DIM_COL = {d: i for i, d in enumerate(DIMS)}            # M→0, N→1, K→2
+_ORDER_IDX = {o: i for i, o in enumerate(ORDERS)}
+# Per loop order: does the operand's (single) irrelevant dim sit outer to
+# its innermost relevant loop?  Probed through irrelevant_refetch itself so
+# the table can never drift from the scalar rule.
+_PROBE = {d: 2 for d in DIMS}
+_REFETCH_OUTER = {
+    X: np.array([irrelevant_refetch(o, X, _PROBE) > 1.0 for o in ORDERS])
+    for X in ("I", "W", "O")}
+_IRR_COL = {"I": _DIM_COL["K"], "W": _DIM_COL["M"], "O": _DIM_COL["N"]}
+
+
+@dataclasses.dataclass(frozen=True)
+class _FormatRow:
+    """One CompiledFormat flattened for vectorized fetch/decode math."""
+
+    dense: bool
+    dense_bits: float
+    payload_bits: float
+    ratio: float
+    lvl_col: np.ndarray          # (L,) int — tile column per level
+    lvl_block: np.ndarray        # (L,) float — block_below per level
+    lvl_meta: np.ndarray         # (L,) float
+    lvl_decode: np.ndarray       # (L,) float
+    gran: np.ndarray             # (3,) float — payload granule per dim, 1=none
+
+
+_ROW_CACHE: dict = memo.register({})
+
+
+def _format_row(cf: CompiledFormat) -> _FormatRow:
+    key = (cf.fmt is None, cf.dense_bits, cf.payload_bits, cf.levels,
+           tuple(sorted(cf.payload_granule.items())))
+    return memo.get_or(_ROW_CACHE, key, lambda: _build_row(cf))
+
+
+def _build_row(cf: CompiledFormat) -> _FormatRow:
+    gran = np.ones(len(DIMS))
+    for d, g in cf.payload_granule.items():
+        if g > 1:
+            gran[_DIM_COL[d]] = float(g)
+    return _FormatRow(
+        dense=cf.fmt is None,
+        dense_bits=cf.dense_bits,
+        payload_bits=cf.payload_bits,
+        ratio=cf.ratio,
+        lvl_col=np.array([_DIM_COL[l.dim] for l in cf.levels], np.int64),
+        lvl_block=np.array([float(l.block_below) for l in cf.levels]),
+        lvl_meta=np.array([l.meta_bits for l in cf.levels]),
+        lvl_decode=np.array([l.decode_ops for l in cf.levels]),
+        gran=gran,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class _FormatSoA:
+    """A stack of _FormatRows, level-padded (block=1, meta=decode=0)."""
+
+    dense: np.ndarray            # (m,) bool
+    dense_bits: np.ndarray       # (m,)
+    payload_bits: np.ndarray     # (m,)
+    ratio: np.ndarray            # (m,)
+    lvl_col: np.ndarray          # (m, L) int
+    lvl_block: np.ndarray        # (m, L)
+    lvl_meta: np.ndarray         # (m, L)
+    lvl_decode: np.ndarray       # (m, L)
+    gran: np.ndarray             # (m, 3)
+
+
+def _pack(cfs: Sequence[CompiledFormat]) -> _FormatSoA:
+    rows = [_format_row(cf) for cf in cfs]
+    m = len(rows)
+    L = max((len(r.lvl_col) for r in rows), default=0) or 1
+    col = np.zeros((m, L), np.int64)
+    blk = np.ones((m, L))
+    met = np.zeros((m, L))
+    dec = np.zeros((m, L))
+    for i, r in enumerate(rows):
+        k = len(r.lvl_col)
+        col[i, :k] = r.lvl_col
+        blk[i, :k] = r.lvl_block
+        met[i, :k] = r.lvl_meta
+        dec[i, :k] = r.lvl_decode
+    return _FormatSoA(
+        dense=np.array([r.dense for r in rows], bool),
+        dense_bits=np.array([r.dense_bits for r in rows]),
+        payload_bits=np.array([r.payload_bits for r in rows]),
+        ratio=np.array([r.ratio for r in rows]),
+        lvl_col=col, lvl_block=blk, lvl_meta=met, lvl_decode=dec,
+        gran=np.stack([r.gran for r in rows]),
+    )
+
+
+def _align_vec(b: np.ndarray, t: np.ndarray) -> np.ndarray:
+    """Vectorized CompiledFormat._align: b/t when b>t, else ceil(t/b)/(t/b)."""
+    whole = t / b
+    return np.where(b > t, b / t, np.ceil(whole) / whole)
+
+
+def _tiles_at_levels(soa: _FormatSoA, tiles: np.ndarray) -> np.ndarray:
+    """Gather per-level tile extents: (n, L).  A one-row SoA broadcasts
+    against an n-candidate tile array."""
+    if soa.lvl_col.shape[0] == 1:
+        return tiles[:, soa.lvl_col[0]]
+    return np.take_along_axis(tiles, soa.lvl_col, axis=1)
+
+
+def _fetched_bits_vec(soa: _FormatSoA, tiles: np.ndarray) -> np.ndarray:
+    a = _align_vec(soa.lvl_block, _tiles_at_levels(soa, tiles))
+    meta = (soa.lvl_meta * a).sum(axis=1)
+    pay = soa.payload_bits * _align_vec(soa.gran, tiles).prod(axis=1)
+    return np.where(soa.dense, soa.dense_bits, pay + meta)
+
+
+def _decode_ops_vec(soa: _FormatSoA, tiles: np.ndarray) -> np.ndarray:
+    a = _align_vec(soa.lvl_block, _tiles_at_levels(soa, tiles))
+    return np.where(soa.dense, 0.0, (soa.lvl_decode * a).sum(axis=1))
+
+
+def _prob_nonempty_vec(sp, vals: np.ndarray) -> np.ndarray:
+    # Distribution models are arbitrary Python; tile extents come from a
+    # small divisor set, so evaluate once per unique value and gather.
+    uniq, inv = np.unique(vals, return_inverse=True)
+    return np.array([sp.prob_nonempty(v) for v in uniq])[inv]
+
+
+@dataclasses.dataclass
+class BatchCost:
+    """Vectorized cost of n (mapping, format-pair) candidates of one op.
+
+    All arrays are length n and already scaled by ``op.count``;
+    :meth:`report` reconstitutes the full scalar :class:`CostReport` for one
+    candidate (identical to what :func:`evaluate` returns for it)."""
+
+    energy: np.ndarray
+    cycles: np.ndarray
+    edp: np.ndarray
+    utilization: np.ndarray
+    dram_bits: np.ndarray
+    e_dram: np.ndarray
+    e_glb: np.ndarray
+    e_decode: np.ndarray
+    dram_cycles: np.ndarray
+    compute_cycles: np.ndarray
+    e_rf: float                     # format-independent, scalar
+    e_mac: float
+
+    def __len__(self) -> int:
+        return len(self.energy)
+
+    def metric(self, objective: str) -> np.ndarray:
+        return {"energy": self.energy, "latency": self.cycles,
+                "edp": self.edp}[objective]
+
+    def report(self, i: int) -> CostReport:
+        return CostReport(
+            energy=float(self.energy[i]),
+            cycles=float(self.cycles[i]),
+            edp=float(self.edp[i]),
+            breakdown={
+                "dram": float(self.e_dram[i]), "glb": float(self.e_glb[i]),
+                "rf": self.e_rf, "mac": self.e_mac,
+                "decode": float(self.e_decode[i]),
+                "dram_cycles": float(self.dram_cycles[i]),
+                "compute_cycles": float(self.compute_cycles[i]),
+            },
+            utilization=float(self.utilization[i]),
+            dram_bits=float(self.dram_bits[i]),
+        )
+
+
+def evaluate_batch(op: MatMul, arch: HardwareConfig,
+                   mappings: Sequence[Mapping],
+                   cf_pairs: Sequence[tuple[CompiledFormat, CompiledFormat]],
+                   cf_o: Optional[CompiledFormat] = None) -> BatchCost:
+    """Vectorized :func:`evaluate` over aligned ``mappings``/``cf_pairs``.
+
+    ``cf_pairs[j]`` is the (cf_i, cf_w) pair scored with ``mappings[j]``; a
+    single pair broadcasts across all mappings.  ``cf_o`` (output writeback
+    format) is shared by the whole batch, mirroring the search structure —
+    it depends on the candidate pattern, not the mapping.
+    """
+    n = len(mappings)
+    if len(cf_pairs) not in (1, n):
+        raise ValueError(f"cf_pairs length {len(cf_pairs)} != 1 or {n}")
+    if n == 0:
+        z = np.zeros(0)
+        return BatchCost(energy=z, cycles=z, edp=z, utilization=z,
+                         dram_bits=z, e_dram=z, e_glb=z, e_decode=z,
+                         dram_cycles=z, compute_cycles=z, e_rf=0.0, e_mac=0.0)
     vb = op.value_bits
     rho_i = op.sp_i.density
     rho_w = op.sp_w.density
     mac_frac = arch.reduc.mac_fraction(rho_i, rho_w)
     cyc_frac = arch.reduc.cycle_fraction(rho_i, rho_w)
-
     macs_dense = float(op.M) * op.N * op.K
-    bounds = mapping.bounds(op)
-    tile, sp, order = mapping.tile, mapping.spatial, mapping.order
+
+    tiles = np.array([[m.tile[d] for d in DIMS] for m in mappings], np.int64)
+    sps = np.array([[m.spatial[d] for d in DIMS] for m in mappings], np.int64)
+    ords = np.array([_ORDER_IDX[m.order] for m in mappings], np.int64)
+    tiles_f = tiles.astype(float)
+    sps_f = sps.astype(float)
+    ext = np.array([op.M, op.N, op.K], float)
+    bounds = np.ceil(ext / tiles_f)
+
+    soa_i = _pack([p[0] for p in cf_pairs])
+    soa_w = _pack([p[1] for p in cf_pairs])
 
     # --- DRAM traffic (tile-reuse rule + format fetch model) ---------------
-    f_i = irrelevant_refetch(order, "I", bounds)
-    f_w = irrelevant_refetch(order, "W", bounds)
-    f_o = irrelevant_refetch(order, "O", bounds)
+    f_i = np.where(_REFETCH_OUTER["I"][ords], bounds[:, _IRR_COL["I"]], 1.0)
+    f_w = np.where(_REFETCH_OUTER["W"][ords], bounds[:, _IRR_COL["W"]], 1.0)
+    f_o = np.where(_REFETCH_OUTER["O"][ords], bounds[:, _IRR_COL["O"]], 1.0)
     o_elems = float(op.M) * op.K
-    o_tile = {"M": tile["M"], "K": tile["K"]}
-    o_final = (cf_o.fetched_bits(o_tile) if cf_o is not None
-               else o_elems * vb)                 # compressed writeback
+    if cf_o is not None:
+        # cf_o's dims are (M, K); the N column of ``tiles`` is never indexed
+        o_final = _fetched_bits_vec(_pack([cf_o]), tiles_f)
+    else:
+        o_final = np.full(n, o_elems * vb)        # compressed writeback
     # intermediate partial sums (when the reduction is split across tiles)
     # move in wide precision: (f_o − 1) write+read round trips
     o_bits = 2.0 * (f_o - 1.0) * o_elems * 2 * vb + o_final
@@ -181,15 +427,15 @@ def evaluate(op: MatMul, arch: HardwareConfig, mapping: Mapping,
     # input element pairing it inside the tile is non-zero (decisive during
     # decode, M=1: zero activations skip whole weight rows — Deja-Vu-style);
     # symmetrically for I under weight checking.
-    w_fetch = 1.0
-    i_fetch = 1.0
+    w_fetch = np.ones(n)
+    i_fetch = np.ones(n)
     if arch.reduc.kind == "skipping":
         if arch.reduc.check_i:
-            w_fetch = op.sp_i.prob_nonempty(tile["M"])
+            w_fetch = _prob_nonempty_vec(op.sp_i, tiles[:, _DIM_COL["M"]])
         if arch.reduc.check_w:
-            i_fetch = op.sp_w.prob_nonempty(tile["K"])
-    dram_bits = (cf_i.fetched_bits(tile) * f_i * i_fetch +
-                 cf_w.fetched_bits(tile) * f_w * w_fetch +
+            i_fetch = _prob_nonempty_vec(op.sp_w, tiles[:, _DIM_COL["K"]])
+    dram_bits = (_fetched_bits_vec(soa_i, tiles_f) * f_i * i_fetch +
+                 _fetched_bits_vec(soa_w, tiles_f) * f_w * w_fetch +
                  o_bits)
 
     # --- GLB traffic: per-MAC operand streams with spatial + RF reuse ------
@@ -203,12 +449,12 @@ def evaluate(op: MatMul, arch: HardwareConfig, mapping: Mapping,
     skip = arch.reduc.kind == "skipping"
     i_partner = rho_w if (skip and arch.reduc.check_w) else 1.0
     w_partner = rho_i if (skip and arch.reduc.check_i) else 1.0
-    glb_bits = (macs_dense * vb / (sp["K"] * rr) * min(cf_i.ratio, 1.0)
-                * i_partner +
-                macs_dense * vb / (sp["M"] * rr) * min(cf_w.ratio, 1.0)
-                * w_partner +
-                macs_dense * 2 * vb * mac_frac / (sp["N"] * rr *
-                                                  max(tile["N"] // sp["N"], 1))
+    n_stat = np.maximum(tiles[:, 1] // sps[:, 1], 1)
+    glb_bits = (macs_dense * vb / (sps_f[:, 2] * rr)
+                * np.minimum(soa_i.ratio, 1.0) * i_partner +
+                macs_dense * vb / (sps_f[:, 0] * rr)
+                * np.minimum(soa_w.ratio, 1.0) * w_partner +
+                macs_dense * 2 * vb * mac_frac / (sps_f[:, 1] * rr * n_stat)
                 + o_bits)
 
     # --- RF + MAC ----------------------------------------------------------
@@ -216,7 +462,8 @@ def evaluate(op: MatMul, arch: HardwareConfig, mapping: Mapping,
     mac_energy = macs_dense * mac_frac * arch.mac_pj
 
     # --- metadata decode (charged per DRAM stream) --------------------------
-    decode = (cf_i.decode_ops(tile) * f_i + cf_w.decode_ops(tile) * f_w)
+    decode = (_decode_ops_vec(soa_i, tiles_f) * f_i +
+              _decode_ops_vec(soa_w, tiles_f) * f_w)
     decode_energy = decode * arch.decode_pj_per_op
 
     e_dram = dram_bits * arch.dram.pj_per_bit
@@ -225,32 +472,48 @@ def evaluate(op: MatMul, arch: HardwareConfig, mapping: Mapping,
     energy = e_dram + e_glb + e_rf + mac_energy + decode_energy
 
     # --- latency ------------------------------------------------------------
-    n_tiles = bounds["M"] * bounds["N"] * bounds["K"]
-    per_tile_cycles = (math.ceil(tile["M"] / sp["M"]) *
-                       math.ceil(tile["N"] / sp["N"]) *
-                       math.ceil(tile["K"] / sp["K"]))
+    n_tiles = bounds.prod(axis=1)
+    per_tile_cycles = np.ceil(tiles_f / sps_f).prod(axis=1)
     compute_cycles = n_tiles * per_tile_cycles * cyc_frac
     dram_cycles = dram_bits / arch.dram.bw_bits_per_cycle
     glb_cycles = glb_bits / arch.glb.bw_bits_per_cycle
-    cycles = max(compute_cycles, dram_cycles, glb_cycles, 1.0)
+    cycles = np.maximum(np.maximum(compute_cycles, dram_cycles),
+                        np.maximum(glb_cycles, 1.0))
 
-    util = macs_dense * cyc_frac / (max(compute_cycles, 1.0) * arch.macs)
+    util = macs_dense * cyc_frac / (np.maximum(compute_cycles, 1.0)
+                                    * arch.macs)
     cnt = op.count
-    energy *= cnt
-    cycles *= cnt
-    return CostReport(
+    energy = energy * cnt
+    cycles = cycles * cnt
+    return BatchCost(
         energy=energy,
         cycles=cycles,
         edp=energy * cycles,
-        breakdown={
-            "dram": e_dram * cnt, "glb": e_glb * cnt, "rf": e_rf * cnt,
-            "mac": mac_energy * cnt, "decode": decode_energy * cnt,
-            "dram_cycles": dram_cycles * cnt,
-            "compute_cycles": compute_cycles * cnt,
-        },
-        utilization=min(util, 1.0),
+        utilization=np.minimum(util, 1.0),
         dram_bits=dram_bits * cnt,
+        e_dram=e_dram * cnt,
+        e_glb=e_glb * cnt,
+        e_decode=decode_energy * cnt,
+        dram_cycles=dram_cycles * cnt,
+        compute_cycles=compute_cycles * cnt,
+        e_rf=e_rf * cnt,
+        e_mac=mac_energy * cnt,
     )
+
+
+def evaluate(op: MatMul, arch: HardwareConfig, mapping: Mapping,
+             cf_i: CompiledFormat, cf_w: CompiledFormat,
+             cf_o: Optional[CompiledFormat] = None) -> CostReport:
+    """Cost of running ``op`` with ``mapping`` and the given formats.
+
+    ``cf_o``: format for the OUTPUT activation writeback (SCNN-style — the
+    output is the next operator's sparse input and leaves the chip
+    compressed).  Partial sums still move in wide precision.
+
+    Thin wrapper over :func:`evaluate_batch` with a batch of one — the
+    vectorized path is the single source of truth for the formulas."""
+    return evaluate_batch(op, arch, (mapping,), ((cf_i, cf_w),),
+                          cf_o).report(0)
 
 
 def memory_energy(report: CostReport) -> float:

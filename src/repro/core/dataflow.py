@@ -25,6 +25,7 @@ import itertools
 import math
 from typing import Iterator, Optional, Sequence
 
+from repro.core import memo
 from repro.core.arch import HardwareConfig
 from repro.core.workload import MatMul
 
@@ -180,3 +181,29 @@ def enumerate_mappings(op: MatMul, arch: HardwareConfig,
                 continue
             for order in orders:
                 yield Mapping(spatial=sp, tile=tile, order=order)
+
+
+_MAPPINGS_CACHE: dict = memo.register({})
+
+
+def mappings_for(op: MatMul, arch: HardwareConfig,
+                 ratio_i: float = 1.0, ratio_w: float = 1.0,
+                 spatial_top: int = 4,
+                 orders: Optional[Sequence[tuple[str, str, str]]] = None,
+                 ) -> tuple[Mapping, ...]:
+    """Memoized :func:`enumerate_mappings` (same candidate set, same order).
+
+    The space depends only on the op SHAPE (extents + value_bits — names,
+    sparsity models and repeat counts do not enter legality), the
+    architecture, the exact compression ratios, and the enumeration knobs —
+    that tuple is the cache key, so identical layers across pattern pairs
+    and models enumerate once.
+    """
+    orders = tuple(orders) if orders is not None else ORDERS
+    key = ((op.M, op.N, op.K, op.value_bits), arch, ratio_i, ratio_w,
+           spatial_top, orders)
+    return memo.get_or(
+        _MAPPINGS_CACHE, key,
+        lambda: tuple(enumerate_mappings(op, arch, ratio_i, ratio_w,
+                                         spatial_top=spatial_top,
+                                         orders=orders)))

@@ -24,6 +24,7 @@ import math
 from typing import Iterable, Optional, Sequence
 
 from repro.core import formats as F
+from repro.core import memo
 from repro.core.dataflow import Mapping
 from repro.core.formats import Format, Level
 from repro.core.primitives import Prim
@@ -62,6 +63,9 @@ def eq_data(total_bits: float, levels: int, gamma: float) -> float:
     return (gamma ** levels) * total_bits
 
 
+_CANDIDATES_CACHE: dict = memo.register({})
+
+
 def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
                         penalize: bool = True,
                         stats: Optional[SearchStats] = None,
@@ -75,8 +79,29 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
     ``penalize=False`` every prefix is extended (the "w/o penalizing"
     series).  Returns the top-k candidates by EqData, each carrying its best
     reference allocation.
+
+    Memoized by (spec dims+sparsity+value_bits, cfg, penalize): the search
+    is deterministic, so repeat calls (per role × per pattern pair × per
+    model in :func:`repro.core.cosearch.cosearch_multi`) replay the cached
+    candidate list plus the counter deltas into ``stats``.
     """
-    stats = stats if stats is not None else SearchStats()
+    outer_stats = stats
+    try:
+        key = ((tuple(spec.dims.items()), spec.sparsity, spec.value_bits),
+               cfg, penalize)
+        hash(key)
+    except TypeError:
+        key = None
+    if key is not None and memo.enabled():
+        hit = _CANDIDATES_CACHE.get(key)
+        if hit is not None:
+            cands, delta = hit
+            if outer_stats is not None:
+                outer_stats.patterns_seen += delta.patterns_seen
+                outer_stats.allocations_seen += delta.allocations_seen
+                outer_stats.pruned_patterns += delta.pruned_patterns
+            return list(cands)
+    stats = SearchStats()
     dims = list(spec.dims)
 
     def score(pattern: tuple[Level, ...], bar: float) -> Optional[Candidate]:
@@ -133,7 +158,14 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
         best_simpler = min(best_simpler, level_best)
 
     out.sort(key=lambda c: c.eq_data)
-    return out[: cfg.top_k]
+    out = out[: cfg.top_k]
+    if key is not None and memo.enabled():
+        _CANDIDATES_CACHE[key] = (tuple(out), stats)
+    if outer_stats is not None:
+        outer_stats.patterns_seen += stats.patterns_seen
+        outer_stats.allocations_seen += stats.allocations_seen
+        outer_stats.pruned_patterns += stats.pruned_patterns
+    return list(out)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,84 @@
+"""Central memoization registry for the search/evaluation hot path.
+
+The co-search re-derives a lot of identical intermediate state: the same
+(format, tensor) pair is compiled once per op per pattern pair, the same
+mapping space is enumerated once per pattern pair, and identical layers are
+re-searched across pairs and models.  Modules register their caches here so
+they can be cleared (tests, benchmarks) or bypassed (cache-correctness
+checks, seed-path timing) in one place.
+
+Cache keys are **value-based** (frozen-dataclass fields, dict items tuples)
+rather than object identities, so equal inputs hit regardless of where they
+were constructed.  Keys used across the codebase:
+
+  * ``compile_format`` / ``analyze``: (format levels+name, dims items,
+    sparsity model, value_bits);
+  * ``enumerate_mappings``:   ((M, N, K), value_bits, arch, ratio_i,
+    ratio_w, spatial_top, orders);
+  * ``_reference_cf``:        (pattern levels or named format, spec key);
+  * ``_search_op``:           (op shape+sparsity+count, arch, candidate
+    pair, CoSearchConfig);
+  * ``generate_candidates``:  (spec key, EngineConfig, penalize).
+
+Unhashable inputs (e.g. a custom ``Sparsity`` subclass) silently skip the
+cache — correctness never depends on a hit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Iterator
+
+_REGISTRY: list[dict] = []
+_enabled: bool = True
+_MISS = object()                # distinguishes a cached None from a miss
+
+
+def register(cache: dict) -> dict:
+    """Register a module-level cache dict for global clear/disable."""
+    _REGISTRY.append(cache)
+    return cache
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def set_enabled(on: bool) -> None:
+    global _enabled
+    _enabled = on
+
+
+def clear() -> None:
+    for c in _REGISTRY:
+        c.clear()
+
+
+@contextlib.contextmanager
+def disabled() -> Iterator[None]:
+    """Temporarily bypass every registered cache (they keep their entries)."""
+    global _enabled
+    prev = _enabled
+    _enabled = False
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+def get_or(cache: dict, key: Any, compute: Callable[[], Any]) -> Any:
+    """``cache[key]`` or ``compute()`` (stored), honoring the global switch.
+
+    ``key`` may be None (caller found its inputs unhashable) — then this is
+    a plain ``compute()``.
+    """
+    if key is None or not _enabled:
+        return compute()
+    try:
+        hit = cache.get(key, _MISS)
+    except TypeError:           # unhashable component slipped into the key
+        return compute()
+    if hit is _MISS:
+        hit = compute()
+        cache[key] = hit
+    return hit

@@ -21,6 +21,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import memo
 from repro.core.formats import Format
 from repro.core.primitives import (DECODE_COST, LevelStats, Prim, clog2,
                                    keeps_only_nonempty, metadata_bits)
@@ -125,10 +126,21 @@ class SizeReport:
 # Expectation model
 # ---------------------------------------------------------------------------
 
+_ANALYZE_CACHE: dict = memo.register({})
+
+
 def analyze(fmt: Format, spec: TensorSpec) -> SizeReport:
     """Expected compressed size of ``spec`` under ``fmt``.
 
-    Walk levels outer→inner.  Invariants maintained:
+    Memoized by (format, dims, sparsity, value_bits) — the engine's
+    allocation scoring and the co-search's format compilation revisit the
+    same (format, tensor) pairs constantly."""
+    key = (fmt, tuple(spec.dims.items()), spec.sparsity, spec.value_bits)
+    return memo.get_or(_ANALYZE_CACHE, key, lambda: _analyze_impl(fmt, spec))
+
+
+def _analyze_impl(fmt: Format, spec: TensorSpec) -> SizeReport:
+    """Walk levels outer→inner.  Invariants maintained:
       stored   — expected number of stored units entering level i
                  (the level's parents);
       covered  — elements covered by ONE unit at the parent level.

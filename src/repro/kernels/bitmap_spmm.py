@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(counts_ref, offs_ref, rows_ref, x_ref, w_ref, y_ref):
     kj = pl.program_id(1)
@@ -78,6 +80,6 @@ def bitmap_spmm_pallas(x: jax.Array, blocks: jax.Array, counts: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(counts, offsets, row_ids, x, blocks)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(x_ref, wc_ref, idx_ref, y_ref, *, n_sel: int, m_group: int):
     ni = pl.program_id(2)
@@ -68,6 +70,6 @@ def nm_spmm_pallas(x: jax.Array, wc: jax.Array, idx: jax.Array,
         out_specs=pl.BlockSpec((bm, bk), lambda mi, kj, ni: (mi, kj)),
         out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x, wc, idx)

@@ -1,0 +1,13 @@
+"""Compatibility shims across JAX / Pallas releases.
+
+The TPU compiler-params dataclass was renamed ``TPUCompilerParams`` →
+``CompilerParams`` across JAX releases; resolve whichever the pinned JAX
+ships so the kernels import everywhere.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or pltpu.TPUCompilerParams)

@@ -77,6 +77,7 @@ def test_dimo_like_search_runs():
     assert res.evaluations >= 2 * len(wl.ops)
 
 
+@pytest.mark.slow
 def test_multi_model_importance_selection():
     wl_a = build_llm(LLMSpec("A", 2, 256, 1024, 4), seq=64,
                      act_density=0.2, w_density=0.2)

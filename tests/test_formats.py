@@ -4,8 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core import formats as F
 from repro.core.formats import Format, Level

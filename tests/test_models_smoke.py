@@ -9,6 +9,9 @@ import pytest
 from repro.configs import SHAPES, get_config, list_archs
 from repro.models.transformer import Model, input_specs
 
+# full end-to-end / many-model sweeps dominate suite wall-clock
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

@@ -23,6 +23,9 @@ from repro.models.transformer import Model
 from repro.optim import adamw
 from repro.sparse import masks
 
+# full end-to-end / many-model sweeps dominate suite wall-clock
+pytestmark = pytest.mark.slow
+
 FAST = CoSearchConfig(objective="edp",
                       engine=EngineConfig(max_levels=2,
                                           max_allocs_per_pattern=16),
