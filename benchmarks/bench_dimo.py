@@ -2,35 +2,90 @@
 format, SnipSnap's progressive search vs an iterative mapping optimizer of
 the DiMO kind (random-restart coordinate descent needing many model
 evaluations).  Paper: 19.4× / 19.7× / 23.8× (AlexNet / VGG-16 / ResNet-18),
-21.0× average."""
+21.0× average.
+
+The paper's ratio is about WORKFLOW cost — a DiMO-style tuner needs
+thousands of model evaluations per op where the progressive search needs a
+handful — so the machine-independent evaluation-count ratio is reported
+alongside wall-clock.  The ``dimo_batch_*`` rows compare our own old-vs-new
+DiMO implementation (seed per-draw scalar loop vs the batched replay, all
+caches bypassed, designs asserted bit-identical): that ratio is pure
+vectorization engineering and is what lets the full CNN sweep run at scale.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import memo
 from repro.core.arch import ARCH3
 from repro.core.baselines import dimo_like_search
 from repro.core.cosearch import CoSearchConfig, cosearch
-from repro.core.workload import alexnet, resnet18, vgg16
+from repro.core.workload import MatMul, Workload, alexnet, resnet18, vgg16
+from repro.core.sparsity import Bernoulli
 
 CFG = CoSearchConfig(objective="edp", spatial_top=2)
 
 
-def run() -> None:
+def _fingerprint(res):
+    return (res.design.energy, res.design.cycles, res.evaluations,
+            tuple((str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+                  for o in res.design.ops))
+
+
+def _tiny_cnn() -> Workload:
+    return Workload("tinycnn", (
+        MatMul("conv1", 64, 96, 64, Bernoulli(0.6), Bernoulli(0.35)),
+        MatMul("conv2", 32, 128, 96, Bernoulli(0.6), Bernoulli(0.35)),
+    ))
+
+
+def run_batch_comparison(quick: bool = False) -> None:
+    """Old-vs-new dimo_like_search: the seed scalar descent (one evaluate
+    per draw) against the batched replay (one evaluate_batch per op + array
+    indexing), caches bypassed for both, same seed — designs and eval
+    counts bit-identical."""
     ratios = []
-    for wl in (alexnet(), vgg16(), resnet18()):
+    workloads = (_tiny_cnn(),) if quick else (alexnet(), resnet18())
+    iters = 200 if quick else 800
+    for wl in workloads:
+        with memo.disabled():
+            old = dimo_like_search(wl, ARCH3, CFG, restarts=8, iters=iters,
+                                   seed=0, use_batch=False)
+            new = dimo_like_search(wl, ARCH3, CFG, restarts=8, iters=iters,
+                                   seed=0, use_batch=True)
+        assert _fingerprint(old) == _fingerprint(new), \
+            "batched DiMO descent changed results"
+        tr = old.runtime_s / max(new.runtime_s, 1e-9)
+        ratios.append(tr)
+        emit(f"dimo_batch_{wl.name}", new.runtime_s * 1e6,
+             f"scalar/batch time={tr:.1f}x evals={new.evaluations}")
+    emit("dimo_batch_avg", 0.0,
+         f"batched descent speedup={np.mean(ratios):.1f}x (target >=5x)")
+
+
+def run(quick: bool = False) -> None:
+    run_batch_comparison(quick=quick)
+    t_ratios, e_ratios = [], []
+    workloads = (_tiny_cnn(),) if quick else (alexnet(), vgg16(), resnet18())
+    iters = 400 if quick else 4000
+    for wl in workloads:
         prog = cosearch(wl, ARCH3, CFG, fixed_formats=("Bitmap", "Bitmap"))
         # DiMO's differentiable-relaxation loop needs thousands of model
         # evaluations per op to converge (forward+backward per iterate)
-        dimo = dimo_like_search(wl, ARCH3, CFG, restarts=16, iters=4000)
+        dimo = dimo_like_search(wl, ARCH3, CFG, restarts=16, iters=iters)
         tr = dimo.runtime_s / max(prog.runtime_s, 1e-9)
+        er = dimo.evaluations / max(prog.evaluations, 1)
         q = dimo.design.edp / prog.design.edp
-        ratios.append(tr)
+        t_ratios.append(tr)
+        e_ratios.append(er)
         emit(f"dimo_{wl.name}", prog.runtime_s * 1e6,
-             f"dimo/progressive time={tr:.1f}x dimo_quality={q:.2f}x")
+             f"dimo/progressive time={tr:.1f}x evals={er:.1f}x "
+             f"dimo_quality={q:.2f}x")
     emit("dimo_avg", 0.0,
-         f"time={np.mean(ratios):.1f}x (paper: 19.4-23.8x, avg 21.0x)")
+         f"time={np.mean(t_ratios):.1f}x evals={np.mean(e_ratios):.1f}x "
+         "(paper wall-clock vs DiMO-Sparse: 19.4-23.8x, avg 21.0x)")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,11 @@ Case 1: BERT-Base (256-token NLU) + OPT-125M (256 in / 32 out generation).
 Case 2: speculative decoding — OPT-125M draft + OPT-6.7B verify, both
 256 in / 32 out.  Baseline: best per-model-optimal FIXED format applied
 shared.  Paper: 14.23% average energy saving.
+
+The ``fig11_workers`` row compares serial vs thread-sharded
+``cosearch_multi`` (the flat (pair, model) work-list shards across a
+``concurrent.futures`` pool sharing the ``_search_op`` cache; results are
+asserted identical — the merge is deterministic by construction).
 """
 
 from __future__ import annotations
@@ -11,11 +16,13 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, timed
+from repro.core import memo
 from repro.core.arch import ARCH3
 from repro.core.cosearch import CoSearchConfig, cosearch, cosearch_multi
 from repro.core.engine import EngineConfig
 from repro.core.formats import STANDARD_BASELINES
-from repro.core.workload import BERT_BASE, OPT_125M, OPT_6_7B, build_llm
+from repro.core.workload import (BERT_BASE, LLMSpec, OPT_125M, OPT_6_7B,
+                                 build_llm)
 
 CFG = CoSearchConfig(objective="energy",
                      engine=EngineConfig(max_levels=2,
@@ -41,7 +48,35 @@ def _case(name: str, workloads, importance, paper_hint: str) -> float:
     return saving
 
 
-def run() -> None:
+def run_workers_comparison(workloads, importance) -> None:
+    """Serial vs sharded cosearch_multi, cold caches each, same results."""
+    memo.clear()
+    (d1, k1, v1), t1 = timed(cosearch_multi, workloads, ARCH3,
+                             importance, CFG)
+    memo.clear()
+    (d2, k2, v2), t2 = timed(cosearch_multi, workloads, ARCH3,
+                             importance, CFG, workers=4)
+    assert (k1, v1) == (k2, v2) and set(d1) == set(d2), \
+        "sharded cosearch_multi changed results"
+    for m in d1:
+        assert d1[m].design.energy == d2[m].design.energy, m
+    emit("fig11_workers", t2 * 1e6,
+         f"serial/4-workers time={t1 / max(t2, 1e-9):.2f}x "
+         f"(deterministic merge, shared _search_op cache)")
+
+
+def run(quick: bool = False) -> None:
+    if quick:
+        wl_a = build_llm(LLMSpec("A", 2, 256, 1024, 4), seq=64,
+                         act_density=0.2, w_density=0.15)
+        wl_b = build_llm(LLMSpec("B", 2, 256, 1024, 4), seq=64,
+                         act_density=0.4, w_density=0.25)
+        s = _case("quick_tiny_pair", [wl_a, wl_b], {"A": 80.0, "B": 20.0},
+                  "quick smoke")
+        run_workers_comparison([wl_a, wl_b], {"A": 80.0, "B": 20.0})
+        emit("fig11_avg_saving", 0.0, f"{s*100:.2f}% (quick mode)")
+        return
+
     # Fig-10-grade sparsity levels ([4],[5]): BERT is the sparsest (the
     # paper: "emphasizing BERT-Base boosts savings due to its higher
     # sparsity"); OPT-6.7B carries the cost in the speculative pair.
@@ -60,6 +95,8 @@ def run() -> None:
     s2 = _case("case2_specdec_opt125m+6.7b", [wl_opt125, wl_opt67],
                {"OPT-125M": 50.0, "OPT-6.7B": 50.0},
                "format should prioritize OPT-6.7B")
+    run_workers_comparison([wl_bert, wl_opt125],
+                           {"BERT-Base": 80.0, "OPT-125M": 20.0})
     emit("fig11_avg_saving", 0.0,
          f"{np.mean([s1, s2])*100:.2f}% (paper: 14.23%)")
 

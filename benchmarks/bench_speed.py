@@ -7,11 +7,17 @@ Paper: 2248.3× (Fixed) / 231.5× (Search) vs real Sparseloop — our stepwise
 re-implementation is itself far faster than real Sparseloop (no YAML / no
 process spawning / shared evaluator), so expect smaller but structural >1×
 ratios here, plus the evaluation-count ratio which is machine-independent.
+
+Old-vs-new rows (``evaluator_*``, ``engine_*``): the seed scalar paths (all
+caches bypassed) against the vectorized paths — results are asserted
+bit-identical, so the ratios are pure evaluator/engine engineering.
+``memo_stats_*`` rows surface cache effectiveness (hits/lookups per cache).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -20,54 +26,120 @@ from repro.core import memo
 from repro.core.arch import ALL_ARCHS
 from repro.core.baselines import stepwise_search
 from repro.core.cosearch import CoSearchConfig, cosearch
-from repro.core.engine import EngineConfig
-from repro.core.workload import (LLAMA2_13B, LLAMA2_7B, OPT_6_7B, OPT_13B,
-                                 OPT_30B, build_llm)
+from repro.core.engine import EngineConfig, SearchStats, generate_candidates
+from repro.core.sparsity import NM, Bernoulli, TensorSpec
+from repro.core.workload import (LLAMA2_13B, LLAMA2_7B, LLMSpec, OPT_6_7B,
+                                 OPT_13B, OPT_30B, build_llm)
 
 MODELS = {"LLaMA2-7B": LLAMA2_7B, "LLaMA2-13B": LLAMA2_13B,
           "OPT-6.7B": OPT_6_7B, "OPT-13B": OPT_13B, "OPT-30B": OPT_30B}
+
+TINY = LLMSpec("tiny", layers=2, d_model=256, d_ff=1024, heads=4)
 
 CFG = CoSearchConfig(objective="edp",
                      engine=EngineConfig(max_levels=2,
                                          max_allocs_per_pattern=24),
                      spatial_top=2, max_pairs=8)
 
+# The adaptive engine's own configuration (§III-C / Fig. 6: 3-level
+# patterns over the full allocation space) for the candidate-generation
+# old-vs-new comparison.
+ENGINE_CFG = EngineConfig(max_levels=3, max_allocs_per_pattern=64)
+ENGINE_SPECS = {
+    "fig6_unstructured90": TensorSpec({"M": 4096, "N": 4096}, Bernoulli(0.1)),
+    "fig6_nm24": TensorSpec({"M": 4096, "N": 4096}, NM(2, 4)),
+    "llama7b_fc1_w75": TensorSpec({"N": 4096, "K": 11008}, Bernoulli(0.75)),
+}
 
-def run_evaluator_comparison() -> None:
+
+def _emit_memo_stats(tag: str) -> None:
+    """Cache-effectiveness line: hits/lookups per registered cache."""
+    emit(f"memo_stats_{tag}", 0.0, memo.stats_report())
+
+
+def run_engine_comparison(quick: bool = False) -> None:
+    """Old-vs-new candidate generation: the seed per-allocation analyze
+    loop (use_batch=False, caches bypassed) against the vectorized
+    analyze_batch path (cold caches).  Candidates and SearchStats counters
+    are asserted identical — the ratio is pure vectorization."""
+    specs = dict(list(ENGINE_SPECS.items())[:1]) if quick else ENGINE_SPECS
+    ratios = []
+    for name, spec in specs.items():
+        s_old, s_new = SearchStats(), SearchStats()
+        with memo.disabled():
+            t0 = time.perf_counter()
+            old = generate_candidates(spec, ENGINE_CFG, stats=s_old,
+                                      use_batch=False)
+            t_old = time.perf_counter() - t0
+        memo.clear()                     # cold caches: honest new-path time
+        t0 = time.perf_counter()
+        new = generate_candidates(spec, ENGINE_CFG, stats=s_new,
+                                  use_batch=True)
+        t_new = time.perf_counter() - t0
+        assert [(str(c.fmt), c.eq_data) for c in old] == \
+               [(str(c.fmt), c.eq_data) for c in new], \
+            "batched engine changed candidates"
+        assert (s_old.patterns_seen, s_old.allocations_seen,
+                s_old.pruned_patterns) == \
+               (s_new.patterns_seen, s_new.allocations_seen,
+                s_new.pruned_patterns), "batched engine changed counters"
+        tr = t_old / max(t_new, 1e-9)
+        ratios.append(tr)
+        emit(f"engine_{name}", t_new * 1e6,
+             f"scalar/batch time={tr:.1f}x "
+             f"allocs={s_new.allocations_seen} "
+             f"patterns={s_new.patterns_seen}")
+    emit("engine_avg", 0.0,
+         f"batched candidate generation speedup={np.mean(ratios):.1f}x "
+         "(target >=3x)")
+
+
+def run_evaluator_comparison(quick: bool = False) -> None:
     """Old-vs-new evaluator: the seed scalar path (per-candidate evaluate,
     all caches bypassed) against the batch path (evaluate_batch + the memo
     caches, cold start).  Same candidates, same results — the ratio is pure
     evaluator/caching engineering."""
     s_t, s_e = [], []
     scalar_cfg = dataclasses.replace(CFG, use_batch=False)
-    for name, mode in (("LLaMA2-7B", "fixed"), ("LLaMA2-7B", "search"),
-                       ("OPT-6.7B", "fixed")):
-        wl = build_llm(MODELS[name], seq=2048, decode_tokens=128,
+    cases = ((None, "fixed"),) if quick else (
+        ("LLaMA2-7B", "fixed"), ("LLaMA2-7B", "search"),
+        ("OPT-6.7B", "fixed"))
+    for name, mode in cases:
+        spec = TINY if name is None else MODELS[name]
+        wl = build_llm(spec, seq=2048 if name else 128,
+                       decode_tokens=128 if name else 8,
                        act_density=0.75, w_density=0.75)
         fixed = ("Bitmap", "Bitmap") if mode == "fixed" else None
         with memo.disabled():
             old = cosearch(wl, ALL_ARCHS[2], scalar_cfg, fixed_formats=fixed)
         memo.clear()                     # cold caches: honest new-path time
+        memo.reset_stats()
         new = cosearch(wl, ALL_ARCHS[2], CFG, fixed_formats=fixed)
         tr = old.runtime_s / max(new.runtime_s, 1e-9)
         s_t.append(tr)
         s_e.append(new.evaluations / max(new.runtime_s, 1e-9))
         assert new.design.edp == old.design.edp, "batch path changed results"
-        emit(f"evaluator_{mode}_Arch3_{name}", new.runtime_s * 1e6,
+        emit(f"evaluator_{mode}_Arch3_{name or 'tiny'}", new.runtime_s * 1e6,
              f"scalar/batch time={tr:.1f}x "
              f"old={old.evaluations / max(old.runtime_s, 1e-9):.0f}ev/s "
              f"new={new.evaluations / max(new.runtime_s, 1e-9):.0f}ev/s")
+    _emit_memo_stats("evaluator_cold")
     emit("evaluator_avg", 0.0,
          f"batch+caches speedup={np.mean(s_t):.1f}x "
          f"throughput={np.mean(s_e):.0f}ev/s (target >=5x)")
 
 
-def run() -> None:
-    run_evaluator_comparison()
+def run(quick: bool = False) -> None:
+    run_engine_comparison(quick=quick)
+    run_evaluator_comparison(quick=quick)
     t_ratios, e_ratios = [], []
-    for arch in ALL_ARCHS:
-        for name, spec in MODELS.items():
-            wl = build_llm(spec, seq=2048, decode_tokens=128,
+    archs = ALL_ARCHS[2:3] if quick else ALL_ARCHS
+    models = ({"tiny": TINY} if quick else MODELS).items()
+    memo.reset_stats()
+    for arch in archs:
+        for name, spec in models:
+            wl = build_llm(spec, seq=128 if quick else 2048,
+                           decode_tokens=8 if quick else 128,
                            act_density=0.75, w_density=0.75)
             prog = cosearch(wl, arch, CFG, fixed_formats=("Bitmap", "Bitmap"))
             step = stepwise_search(wl, arch, CFG,
@@ -83,15 +155,19 @@ def run() -> None:
     emit("tableI_fixed_avg", 0.0,
          f"time={np.mean(t_ratios):.1f}x evals={np.mean(e_ratios):.1f}x "
          "(paper vs real Sparseloop: 2248.3x)")
+    _emit_memo_stats("tableI_fixed")
 
     # Search mode on one arch (budgeted stepwise sweep is the slow part)
     s_t, s_e, s_q = [], [], []
-    for name in ("LLaMA2-7B", "OPT-6.7B"):
-        wl = build_llm(MODELS[name], seq=2048, decode_tokens=128,
+    search_models = ("tiny",) if quick else ("LLaMA2-7B", "OPT-6.7B")
+    for name in search_models:
+        spec = TINY if name == "tiny" else MODELS[name]
+        wl = build_llm(spec, seq=128 if quick else 2048,
+                       decode_tokens=8 if quick else 128,
                        act_density=0.75, w_density=0.75)
         prog = cosearch(wl, ALL_ARCHS[2], CFG)
         step = stepwise_search(wl, ALL_ARCHS[2], CFG, search_formats=True,
-                               budget_s_per_op=3.0)
+                               budget_s_per_op=0.5 if quick else 3.0)
         s_t.append(step.runtime_s / max(prog.runtime_s, 1e-9))
         s_e.append(step.evaluations / max(prog.evaluations, 1))
         s_q.append(step.design.edp / prog.design.edp)

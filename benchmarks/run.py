@@ -3,16 +3,22 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Roofline terms come from the
 dry-run artifacts (benchmarks/roofline.py builds the table; run
 ``python -m repro.launch.dryrun --all`` first for that one).
+
+``--quick`` runs a smoke pass (tiny model, one arch, reduced iterations)
+through every suite whose ``run`` accepts a ``quick`` flag and skips the
+rest — exercised by a tier-1 test so the benchmark drivers can't silently
+rot.  ``python benchmarks/run.py [suite-substring] [--quick]``.
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> int:
     from benchmarks import (bench_dimo, bench_energy_validation,
                             bench_fig5_payload, bench_fig6_penalty,
                             bench_format_opt, bench_formats_feasibility,
@@ -28,24 +34,32 @@ def main() -> None:
         ("feasibility", bench_formats_feasibility.run),
         ("kernels", bench_kernels.run),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = list(sys.argv[1:] if argv is None else argv)
+    quick = "--quick" in argv
+    argv = [a for a in argv if a != "--quick"]
+    only = argv[0] if argv else None
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites:
         if only and only not in name:
             continue
+        kwargs = {}
+        if quick:
+            if "quick" not in inspect.signature(fn).parameters:
+                print(f"# suite {name} skipped (no quick mode)", flush=True)
+                continue
+            kwargs["quick"] = True
         t0 = time.perf_counter()
         try:
-            fn()
+            fn(**kwargs)
         except Exception:
             failures += 1
             print(f"{name},0,FAILED")
             traceback.print_exc()
         print(f"# suite {name} done in {time.perf_counter()-t0:.1f}s",
               flush=True)
-    if failures:
-        raise SystemExit(1)
+    return failures
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(1 if main() else 0)

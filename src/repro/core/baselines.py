@@ -173,14 +173,27 @@ def dimo_like_search(workload: Workload, arch: HardwareConfig,
                      cfg: CoSearchConfig = CoSearchConfig(),
                      fixed_formats: tuple[Optional[str], Optional[str]] = ("Bitmap", "Bitmap"),
                      restarts: int = 12, iters: int = 200,
-                     seed: int = 0) -> SearchResult:
+                     seed: int = 0, use_batch: bool = True) -> SearchResult:
     """Random-restart coordinate descent over mappings with a preset format —
     a stand-in for DiMO-Sparse's differentiable-relaxation loop, which needs
-    many model evaluations per op to converge."""
+    many model evaluations per op to converge.
+
+    ``use_batch=True`` precomputes the metric of EVERY mapping with one
+    :func:`evaluate_batch` call per op and replays the seeded random walk as
+    pure array indexing: the walk only ever accepts a strictly better
+    candidate, so each restart segment resolves to the FIRST draw attaining
+    the segment's running minimum (``argmin`` with first-occurrence ties),
+    and the cross-restart winner to the first strict minimum over segment
+    bests.  Same RNG stream (one ``_randbelow`` per draw, as ``rng.choice``
+    consumed), bit-identical designs, and ``evaluations`` still counts the
+    walk's model queries (the algorithmic cost of a DiMO-style tuner — what
+    Table I compares), not the internal batching.  ``use_batch=False`` keeps
+    the legacy per-draw scalar loop as the benchmark reference."""
     t0 = time.perf_counter()
     rng = random.Random(seed)
     evals = 0
     ops_out: list[OpDesign] = []
+    steps = iters // restarts
     for op in workload.ops:
         spec_i = TensorSpec(op.i_dims(), op.sp_i, op.value_bits)
         spec_w = TensorSpec(op.w_dims(), op.sp_w, op.value_bits)
@@ -194,12 +207,31 @@ def dimo_like_search(workload: Workload, arch: HardwareConfig,
 
         all_mappings = list(enumerate_mappings(op, arch, 1.0, 1.0,
                                                spatial_top=cfg.spatial_top))
+
+        if use_batch:
+            bc = evaluate_batch(op, arch, all_mappings, [(cf_i, cf_w)], cf_o)
+            metrics = bc.metric(cfg.objective)
+            n = len(all_mappings)
+            # identical RNG stream: rng.choice(seq) is seq[_randbelow(len)]
+            draws = np.array([rng.randrange(n)
+                              for _ in range(restarts * (1 + steps))],
+                             np.int64).reshape(restarts, 1 + steps)
+            evals += restarts * (1 + steps)
+            seg = metrics[draws]                      # (restarts, 1+steps)
+            pos = seg.argmin(axis=1)                  # first draw at seg min
+            per_restart = seg[np.arange(restarts), pos]
+            r = int(np.argmin(per_restart))           # first strict winner
+            j = int(draws[r, pos[r]])
+            ops_out.append(OpDesign(op, all_mappings[j], cf_i.fmt, cf_w.fmt,
+                                    bc.report(j)))
+            continue
+
         best: Optional[OpDesign] = None
         for _ in range(restarts):
             cur = rng.choice(all_mappings)
             cur_cost = evaluate(op, arch, cur, cf_i, cf_w, cf_o)
             evals += 1
-            for _ in range(iters // restarts):
+            for _ in range(steps):
                 nxt = rng.choice(all_mappings)
                 c = evaluate(op, arch, nxt, cf_i, cf_w, cf_o)
                 evals += 1

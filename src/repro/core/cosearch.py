@@ -21,11 +21,15 @@ operator's own tiling.
 Hot-loop structure: per (op, pattern pair), the mapping space comes from the
 memoized :func:`repro.core.dataflow.mappings_for`, mapping-derived
 allocations are deduplicated per (tile, spatial) factor tuple (loop order
-does not enter the allocation), and the whole candidate set is scored in
-one :func:`repro.core.costmodel.evaluate_batch` call.  Whole `_search_op`
-results are memoized by (op shape+sparsity+count, arch, candidate pair,
-config) so identical layers are searched once across pairs and models; see
-:mod:`repro.core.memo` for the cache registry and key conventions.
+does not enter the allocation) and derived for all tuples in one
+:func:`repro.core.engine.allocate_for_mappings` call, and the whole
+candidate set is scored in one :func:`repro.core.costmodel.evaluate_batch`
+call.  Whole `_search_op` results are memoized by (op shape+sparsity+count,
+arch, candidate pair, config) so identical layers are searched once across
+pairs and models; see :mod:`repro.core.memo` for the cache registry and key
+conventions.  :func:`cosearch_multi` flattens (pair, model) items into a
+work-list that can shard across threads (``workers=``) with a
+deterministic merge.
 """
 
 from __future__ import annotations
@@ -44,11 +48,29 @@ from repro.core.costmodel import (CompiledFormat, CostReport, compile_format,
                                   format_key, memory_energy, spec_key)
 from repro.core.dataflow import Mapping, mappings_for
 from repro.core.engine import (Candidate, EngineConfig, SearchStats,
-                               allocate_for_mapping, generate_candidates)
+                               allocate_for_mapping, allocate_for_mappings,
+                               generate_candidates)
 from repro.core.formats import Format, Level, standard_formats
 from repro.core.primitives import Prim
 from repro.core.sparsity import TensorSpec
 from repro.core.workload import MatMul, Workload
+
+
+class SearchError(RuntimeError):
+    """The search space contains no legal design.
+
+    Raised instead of silently asserting: carries the operator name and the
+    (pattern_i, pattern_w) pair that last failed to produce a legal
+    (mapping, allocation), so callers can tell WHICH op/format combination
+    exhausted the space (typically: no mapping fits the GLB under the
+    compression ratios, or the pattern cannot be allocated on the op's
+    dims)."""
+
+    def __init__(self, message: str, op: Optional[str] = None,
+                 pair: Optional[tuple] = None):
+        super().__init__(message)
+        self.op = op
+        self.pair = pair
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,9 +153,24 @@ def _role_candidates(workload: Workload, role: str, cfg: CoSearchConfig,
     spec = _representative_spec(workload, role)
     if spec.sparsity.density > cfg.compress_threshold:
         return [None]                   # dense operand: store uncompressed
-    cands = generate_candidates(spec, cfg.engine, stats=stats)
+    cands = generate_candidates(spec, cfg.engine, stats=stats,
+                                use_batch=cfg.use_batch)
     side = max(2, int(math.isqrt(cfg.max_pairs)) + 1)
     return list(cands[:side]) + [None]
+
+
+def _bare_and_leaf(cand: Candidate
+                   ) -> tuple[tuple[Level, ...], dict[str, int]]:
+    """Strip sizes & dense head from a candidate's reference format; keep
+    dense-leaf block factors (relative block shape travels with the
+    pattern)."""
+    bare = tuple(Level(l.prim, l.dim, None) for l in cand.fmt.levels
+                 if l.prim is not Prim.NONE)
+    pattern_dims_set = {l.dim for l in bare}
+    leaf = {l.dim: int(l.size) for l in cand.fmt.levels
+            if l.prim is Prim.NONE and l.dim in pattern_dims_set
+            and l.size is not None}
+    return bare, leaf
 
 
 def _op_format(cand: Optional[Candidate], pattern_dims: dict[str, int],
@@ -145,21 +182,14 @@ def _op_format(cand: Optional[Candidate], pattern_dims: dict[str, int],
         return None
     if cand.fmt.name in ("Bitmap", "RLE", "CSR", "CSC", "COO"):
         return compile_format(standard_formats(spec.dims)[cand.fmt.name], spec)
-    # strip sizes & dense head from the reference format; keep dense-leaf
-    # block factors (relative block shape travels with the pattern)
-    bare = tuple(Level(l.prim, l.dim, None) for l in cand.fmt.levels
-                 if l.prim is not Prim.NONE)
-    pattern_dims_set = {l.dim for l in bare}
-    leaf = {l.dim: int(l.size) for l in cand.fmt.levels
-            if l.prim is Prim.NONE and l.dim in pattern_dims_set
-            and l.size is not None}
+    bare, leaf = _bare_and_leaf(cand)
     fmt = allocate_for_mapping(bare, spec.dims, spec.dims, mapping, leaf=leaf)
     if fmt is None:
         return None
     return compile_format(fmt, spec)
 
 
-_REFERENCE_CF_CACHE: dict = memo.register({})
+_REFERENCE_CF_CACHE: dict = memo.register({}, "reference_cf")
 
 
 def _reference_cf(cand: Optional[Candidate], spec: TensorSpec
@@ -174,8 +204,7 @@ def _reference_cf(cand: Optional[Candidate], spec: TensorSpec
         return None
     if cand.fmt.name in ("Bitmap", "RLE", "CSR", "CSC", "COO"):
         return compile_format(standard_formats(spec.dims)[cand.fmt.name], spec)
-    bare = tuple(Level(l.prim, l.dim, None) for l in cand.fmt.levels
-                 if l.prim is not Prim.NONE)
+    bare, _ = _bare_and_leaf(cand)
     sk = spec_key(spec)
     return memo.get_or(_REFERENCE_CF_CACHE,
                        None if sk is None else (bare, sk),
@@ -185,13 +214,14 @@ def _reference_cf(cand: Optional[Candidate], spec: TensorSpec
 def _reference_cf_impl(bare: tuple[Level, ...], spec: TensorSpec
                        ) -> Optional[CompiledFormat]:
     from repro.core.formats import allocate
-    from repro.core.sparsity import analyze
-    best_fmt, best_bits = None, math.inf
-    for fmt in allocate(bare, spec.dims, max_allocs=24):
-        bits = analyze(fmt, spec).total_bits
-        if bits < best_bits:
-            best_fmt, best_bits = fmt, bits
-    return compile_format(best_fmt, spec) if best_fmt else None
+    from repro.core.sparsity import analyze_batch
+    fmts = list(allocate(bare, spec.dims, max_allocs=24))
+    if not fmts:
+        return None
+    # one vectorized pass; argmin's first-occurrence ties match the scalar
+    # strict-less scan this replaced
+    j = int(np.argmin(analyze_batch(fmts, spec, validate=False).total_bits))
+    return compile_format(fmts[j], spec)
 
 
 def output_cf(cand_i: Optional[Candidate], op: MatMul
@@ -212,7 +242,7 @@ def output_cf(cand_i: Optional[Candidate], op: MatMul
     return _reference_cf(renamed, spec_o)
 
 
-_SEARCH_OP_CACHE: dict = memo.register({})
+_SEARCH_OP_CACHE: dict = memo.register({}, "search_op")
 
 
 def _search_op_key(op: MatMul, arch: HardwareConfig,
@@ -241,16 +271,34 @@ def _search_op(op: MatMul, arch: HardwareConfig,
     cost model).  The evaluator arbitrates, which is exactly the paper's
     co-design argument made operational."""
     key = _search_op_key(op, arch, cand_i, cand_w, cfg)
-    if memo.enabled() and key is not None and key in _SEARCH_OP_CACHE:
-        od, evals = _SEARCH_OP_CACHE[key]
-        # the cached design came from an identically-shaped op; rebind the
-        # identity (name) of THIS op
-        return (dataclasses.replace(od, op=op) if od is not None else None,
-                evals)
+    if memo.enabled() and key is not None:
+        hit = _SEARCH_OP_CACHE.get(key)
+        memo.note(_SEARCH_OP_CACHE, hit is not None)
+        if hit is not None:
+            od, evals = hit
+            # the cached design came from an identically-shaped op; rebind
+            # the identity (name) of THIS op
+            return (dataclasses.replace(od, op=op) if od is not None
+                    else None, evals)
     od, evals = _search_op_impl(op, arch, cand_i, cand_w, cfg)
     if memo.enabled() and key is not None:
         _SEARCH_OP_CACHE[key] = (od, evals)
     return od, evals
+
+
+def _derived_side(cand: Optional[Candidate], spec: TensorSpec,
+                  rep_mappings: Sequence[Mapping], fixed: bool,
+                  ref: CompiledFormat) -> list[CompiledFormat]:
+    """Mapping-derived allocations for one operand side, one compile per
+    representative mapping (falling back to the reference allocation where
+    the derivation fails) — the batched equivalent of per-mapping
+    :func:`_op_format` calls."""
+    if fixed or cand is None:
+        return [ref] * len(rep_mappings)
+    bare, leaf = _bare_and_leaf(cand)
+    fmts = allocate_for_mappings(bare, spec.dims, spec.dims, rep_mappings,
+                                 leaf=leaf)
+    return [compile_format(f, spec) if f is not None else ref for f in fmts]
 
 
 def _search_op_impl(op: MatMul, arch: HardwareConfig,
@@ -276,15 +324,27 @@ def _search_op_impl(op: MatMul, arch: HardwareConfig,
     # The mapping-derived allocation depends only on the tile/spatial
     # factors, never the loop order — derive once per factor tuple (6
     # orders share each).
+    mappings = mappings_for(op, arch, ratio_i, ratio_w,
+                            spatial_top=cfg.spatial_top)
     derived: dict[tuple, tuple[CompiledFormat, CompiledFormat]] = {}
+    if cfg.use_batch:
+        # batched: all deduped factor tuples of the op derived at once
+        reps: dict[tuple, Mapping] = {}
+        for mapping in mappings:
+            reps.setdefault((tuple(mapping.tile.items()),
+                             tuple(mapping.spatial.items())), mapping)
+        rep_mappings = list(reps.values())
+        der_i = _derived_side(cand_i, spec_i, rep_mappings, fixed_i, ref_i)
+        der_w = _derived_side(cand_w, spec_w, rep_mappings, fixed_w, ref_w)
+        derived = {fkey: (mi, mw)
+                   for fkey, mi, mw in zip(reps, der_i, der_w)}
 
     cand_mappings: list[Mapping] = []
     cand_pairs: list[tuple[CompiledFormat, CompiledFormat]] = []
-    for mapping in mappings_for(op, arch, ratio_i, ratio_w,
-                                spatial_top=cfg.spatial_top):
+    for mapping in mappings:
         fkey = (tuple(mapping.tile.items()), tuple(mapping.spatial.items()))
         pair = derived.get(fkey)
-        if pair is None:
+        if pair is None:            # legacy scalar path (use_batch=False)
             map_i = ref_i if fixed_i else \
                 (_op_format(cand_i, op.i_dims(), mapping, spec_i) or ref_i)
             map_w = ref_w if fixed_w else \
@@ -384,7 +444,9 @@ def cosearch(workload: Workload, arch: HardwareConfig,
 
     evals = 0
     best_design: Optional[DesignPoint] = None
+    last_fail: tuple[Optional[str], Optional[tuple]] = (None, None)
     for ci, cw in pairs:
+        pair_key = (ci.pattern if ci else None, cw.pattern if cw else None)
         ops: list[OpDesign] = []
         ok = True
         for op in workload.ops:
@@ -392,16 +454,19 @@ def cosearch(workload: Workload, arch: HardwareConfig,
             evals += e
             if od is None:
                 ok = False
+                last_fail = (op.name, pair_key)
                 break
             ops.append(od)
         if not ok:
             continue
-        dp = DesignPoint(ops,
-                         ci.pattern if ci else None,
-                         cw.pattern if cw else None)
+        dp = DesignPoint(ops, *pair_key)
         if best_design is None or dp.metric(cfg.objective) < best_design.metric(cfg.objective):
             best_design = dp
-    assert best_design is not None, "search produced no legal design"
+    if best_design is None:
+        raise SearchError(
+            f"co-search produced no legal design for {workload.name!r} "
+            f"(last failure: op={last_fail[0]!r} pair={last_fail[1]!r})",
+            op=last_fail[0], pair=last_fail[1])
     return SearchResult(best_design, evals, time.perf_counter() - t0, stats)
 
 
@@ -412,44 +477,78 @@ def cosearch(workload: Workload, arch: HardwareConfig,
 def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
                    importance: dict[str, float],
                    cfg: CoSearchConfig = CoSearchConfig(),
+                   workers: Optional[int] = None,
                    ) -> tuple[dict[str, SearchResult], tuple, float]:
     """Pick ONE shared format pair across models minimizing the importance-
     weighted objective.  Returns (per-model results under the winning pair,
-    winning pattern pair, weighted metric)."""
-    stats = SearchStats()
-    # union of candidate patterns over models, keyed by pattern pair
+    winning pattern pair, weighted metric).
+
+    Runs as three phases: (1) per-model candidate generation (serial —
+    memoized and cheap — with per-model ``SearchStats`` snapshots, so each
+    model's result reports ITS OWN pattern/allocation counters rather than
+    aliasing one shared object); (2) a flat (pair, model) work-list whose
+    items share the ``_search_op`` cache and are independent — ``workers``
+    opts into a ``concurrent.futures`` thread pool (threads, not processes:
+    the items spend their time in vectorized NumPy which releases the GIL,
+    and share the memo caches); (3) a deterministic merge in work-list
+    order, so results are identical for any worker count."""
+    # -- phase 1: candidate generation, union of pattern pairs over models --
+    per_model_stats: dict[str, SearchStats] = {}
     pair_keys: dict[tuple, tuple[Optional[Candidate], Optional[Candidate]]] = {}
     for wl in workloads:
-        for ci in _role_candidates(wl, "I", cfg, stats):
-            for cw in _role_candidates(wl, "W", cfg, stats):
+        st = SearchStats()
+        cands_i = _role_candidates(wl, "I", cfg, st)
+        cands_w = _role_candidates(wl, "W", cfg, st)
+        per_model_stats[wl.name] = st
+        for ci in cands_i:
+            for cw in cands_w:
                 key = (ci.pattern if ci else None, cw.pattern if cw else None)
                 pair_keys.setdefault(key, (ci, cw))
 
-    table: dict[str, dict[tuple, float]] = {wl.name: {} for wl in workloads}
-    designs: dict[tuple, dict[str, SearchResult]] = {}
     sentinel = _dense_sentinel([c for pair in pair_keys.values()
                                 for c in pair])
     items = sorted(pair_keys.items(),
-                   key=lambda kv: _pair_rank(kv[1], sentinel))
-    for key, (ci, cw) in items[: cfg.max_pairs]:
-        designs[key] = {}
-        for wl in workloads:
-            t0 = time.perf_counter()
-            evals = 0
-            ops = []
-            for op in wl.ops:
-                od, e = _search_op(op, arch, ci, cw, cfg)
-                evals += e
-                if od is None:
-                    break
-                ops.append(od)
-            if len(ops) != len(wl.ops):
-                continue
-            dp = DesignPoint(ops, ci.pattern if ci else None,
-                             cw.pattern if cw else None)
-            designs[key][wl.name] = SearchResult(
-                dp, evals, time.perf_counter() - t0, stats)
-            table[wl.name][key] = dp.metric(cfg.objective)
+                   key=lambda kv: _pair_rank(kv[1], sentinel))[: cfg.max_pairs]
+
+    # -- phase 2: flat (pair, model) work-list ------------------------------
+    work = [(key, pair, wl) for key, pair in items for wl in workloads]
+
+    def run_item(key: tuple,
+                 pair: tuple[Optional[Candidate], Optional[Candidate]],
+                 wl: Workload
+                 ) -> tuple[list[OpDesign], int, float, Optional[str]]:
+        ci, cw = pair
+        t0 = time.perf_counter()
+        evals = 0
+        ops: list[OpDesign] = []
+        for op in wl.ops:
+            od, e = _search_op(op, arch, ci, cw, cfg)
+            evals += e
+            if od is None:
+                return ops, evals, time.perf_counter() - t0, op.name
+            ops.append(od)
+        return ops, evals, time.perf_counter() - t0, None
+
+    if workers is not None and workers > 1:
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            results = list(ex.map(lambda a: run_item(*a), work))
+    else:
+        results = [run_item(*a) for a in work]
+
+    # -- phase 3: deterministic merge in work-list order --------------------
+    table: dict[str, dict[tuple, float]] = {wl.name: {} for wl in workloads}
+    designs: dict[tuple, dict[str, SearchResult]] = {}
+    last_fail: tuple[Optional[str], Optional[tuple]] = (None, None)
+    for (key, (ci, cw), wl), (ops, evals, dt, fail) in zip(work, results):
+        designs.setdefault(key, {})
+        if fail is not None:
+            last_fail = (fail, key)
+            continue
+        dp = DesignPoint(ops, *key)
+        designs[key][wl.name] = SearchResult(
+            dp, evals, dt, dataclasses.replace(per_model_stats[wl.name]))
+        table[wl.name][key] = dp.metric(cfg.objective)
 
     complete = [k for k in designs if len(designs[k]) == len(workloads)]
     best_key, best_val = None, math.inf
@@ -458,5 +557,9 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
                   for wl in workloads)
         if val < best_val:
             best_key, best_val = k, val
-    assert best_key is not None
+    if best_key is None:
+        raise SearchError(
+            "multi-model co-search found no pattern pair legal for every "
+            f"model (last failure: op={last_fail[0]!r} pair={last_fail[1]!r})",
+            op=last_fail[0], pair=last_fail[1])
     return designs[best_key], best_key, best_val

@@ -46,7 +46,7 @@ from repro.core.arch import HardwareConfig
 from repro.core.dataflow import DIMS, ORDERS, Mapping, irrelevant_refetch
 from repro.core.formats import Format
 from repro.core.primitives import DECODE_COST, Prim
-from repro.core.sparsity import SizeReport, TensorSpec, analyze
+from repro.core.sparsity import SizeReport, TensorSpec, analyze, gather_scalar
 from repro.core.workload import MatMul
 
 
@@ -127,7 +127,7 @@ def format_key(fmt: Optional[Format]) -> tuple:
     return (fmt.name, fmt.levels)
 
 
-_COMPILE_CACHE: dict = memo.register({})
+_COMPILE_CACHE: dict = memo.register({}, "compile_format")
 
 
 def compile_format(fmt: Optional[Format], spec: TensorSpec) -> CompiledFormat:
@@ -229,7 +229,7 @@ class _FormatRow:
     gran: np.ndarray             # (3,) float — payload granule per dim, 1=none
 
 
-_ROW_CACHE: dict = memo.register({})
+_ROW_CACHE: dict = memo.register({}, "format_row")
 
 
 def _format_row(cf: CompiledFormat) -> _FormatRow:
@@ -323,9 +323,9 @@ def _decode_ops_vec(soa: _FormatSoA, tiles: np.ndarray) -> np.ndarray:
 
 def _prob_nonempty_vec(sp, vals: np.ndarray) -> np.ndarray:
     # Distribution models are arbitrary Python; tile extents come from a
-    # small divisor set, so evaluate once per unique value and gather.
-    uniq, inv = np.unique(vals, return_inverse=True)
-    return np.array([sp.prob_nonempty(v) for v in uniq])[inv]
+    # small divisor set, so evaluate once per unique value and gather
+    # (shared with sparsity.analyze_batch).
+    return gather_scalar(sp.prob_nonempty, vals)
 
 
 @dataclasses.dataclass

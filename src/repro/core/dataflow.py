@@ -183,7 +183,7 @@ def enumerate_mappings(op: MatMul, arch: HardwareConfig,
                 yield Mapping(spatial=sp, tile=tile, order=order)
 
 
-_MAPPINGS_CACHE: dict = memo.register({})
+_MAPPINGS_CACHE: dict = memo.register({}, "mappings_for")
 
 
 def mappings_for(op: MatMul, arch: HardwareConfig,

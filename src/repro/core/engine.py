@@ -20,15 +20,19 @@ three techniques:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Iterable, Optional, Sequence
+
+import numpy as np
 
 from repro.core import formats as F
 from repro.core import memo
 from repro.core.dataflow import Mapping
 from repro.core.formats import Format, Level
 from repro.core.primitives import Prim
-from repro.core.sparsity import SizeReport, Sparsity, TensorSpec, analyze
+from repro.core.sparsity import (SizeReport, Sparsity, TensorSpec, analyze,
+                                 analyze_batch_rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,12 +67,43 @@ def eq_data(total_bits: float, levels: int, gamma: float) -> float:
     return (gamma ** levels) * total_bits
 
 
-_CANDIDATES_CACHE: dict = memo.register({})
+# Early-exit pruning knobs of the in-pattern allocation scan (§III-C1 applied
+# per allocation): give the scan a warm-up before the simpler-format bar can
+# cut it, and stop once the landscape has flattened.
+_ALLOC_MIN_SCAN = 15
+_ALLOC_PATIENCE = 24
+
+
+def _alloc_scan_len(e: np.ndarray, bar: float) -> tuple[int, bool]:
+    """Replay of the scalar allocation scan's early exits on an EqData
+    vector: (how many allocations the per-candidate loop examines, whether
+    it breaks inside this prefix).  The stop condition at index i depends
+    only on e[:i+1], so the replay is exact on any prefix.  Keeps
+    ``SearchStats.allocations_seen`` and the returned best allocation
+    identical between the batched and scalar paths."""
+    n = len(e)
+    if not math.isfinite(bar):
+        return n, False
+    runmin = np.minimum.accumulate(e)
+    improve = np.empty(n, bool)
+    improve[0] = True
+    improve[1:] = e[1:] < runmin[:-1]
+    idx = np.arange(n)
+    since = idx - np.maximum.accumulate(np.where(improve, idx, -1))
+    stop = ((idx >= _ALLOC_MIN_SCAN) & (runmin >= bar)) | \
+        (since >= _ALLOC_PATIENCE)
+    if not stop.any():
+        return n, False
+    return int(np.argmax(stop)) + 1, True
+
+
+_CANDIDATES_CACHE: dict = memo.register({}, "generate_candidates")
 
 
 def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
                         penalize: bool = True,
                         stats: Optional[SearchStats] = None,
+                        use_batch: bool = True,
                         ) -> list[Candidate]:
     """Enumerate patterns by iterative deepening with complexity pruning.
 
@@ -84,6 +119,13 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
     is deterministic, so repeat calls (per role × per pattern pair × per
     model in :func:`repro.core.cosearch.cosearch_multi`) replay the cached
     candidate list plus the counter deltas into ``stats``.
+
+    ``use_batch=True`` scores every allocation of a pattern in one
+    :func:`repro.core.sparsity.analyze_batch` pass and replays the scalar
+    loop's early-exit pruning on the EqData vector post hoc — results and
+    ``SearchStats`` counters are bit-identical to the legacy per-allocation
+    loop (``use_batch=False``, kept as the benchmark reference), so the two
+    paths share one cache.
     """
     outer_stats = stats
     try:
@@ -94,6 +136,7 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
         key = None
     if key is not None and memo.enabled():
         hit = _CANDIDATES_CACHE.get(key)
+        memo.note(_CANDIDATES_CACHE, hit is not None)
         if hit is not None:
             cands, delta = hit
             if outer_stats is not None:
@@ -104,10 +147,12 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
     stats = SearchStats()
     dims = list(spec.dims)
 
-    def score(pattern: tuple[Level, ...], bar: float) -> Optional[Candidate]:
-        """Best allocation for a pattern.  Allocations are formats too: when
-        penalizing, stop early once the pattern evidently cannot beat the
-        simpler-format bar (the same exclusion rule, applied in-pattern)."""
+    def score_scalar(pattern: tuple[Level, ...], bar: float
+                     ) -> Optional[Candidate]:
+        """Legacy per-allocation loop (the seed path, benchmark reference).
+        When penalizing, stop early once the pattern evidently cannot beat
+        the simpler-format bar (the same exclusion rule, applied
+        in-pattern)."""
         best_alloc: Optional[Candidate] = None
         since_improve = 0
         for i, fmt in enumerate(F.allocate(pattern, spec.dims,
@@ -121,11 +166,63 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
             else:
                 since_improve += 1
             if math.isfinite(bar):
-                if i >= 15 and best_alloc.eq_data >= bar:
+                if i >= _ALLOC_MIN_SCAN and best_alloc.eq_data >= bar:
                     break              # evidently dominated by simpler formats
-                if since_improve >= 24:
+                if since_improve >= _ALLOC_PATIENCE:
                     break              # allocation landscape has flattened
         return best_alloc
+
+    def score_batched(pattern: tuple[Level, ...], bar: float
+                      ) -> Optional[Candidate]:
+        """Allocations scored in vectorized chunks over raw size rows
+        (:func:`repro.core.formats.allocation_plans` +
+        :func:`repro.core.sparsity.analyze_batch_rows` — no Format objects
+        for losing allocations); the early-exit semantics of the scalar
+        loop are applied as a post-hoc cut of the EqData vector, so chunks
+        stop being consumed as soon as the replayed scan breaks (overshoot
+        < one chunk)."""
+        gen = F.allocation_plans(pattern, spec.dims,
+                                 max_allocs=cfg.max_allocs_per_pattern)
+        g = cfg.gamma ** len(pattern)
+        # first chunk reaches exactly the earliest possible bar-stop
+        # (index _ALLOC_MIN_SCAN); later chunks cover one patience window
+        chunk = cfg.max_allocs_per_pattern if not math.isfinite(bar) \
+            else _ALLOC_MIN_SCAN + 1
+        pat_prims = [l.prim for l in pattern]
+        head_prims: Optional[list[Prim]] = None
+        plans: list[F.AllocPlan] = []
+        brs: list[tuple[int, object]] = []      # (row offset, BatchSizeReport)
+        e = np.zeros(0)
+        k = 0
+        while True:
+            part = list(itertools.islice(gen, chunk))
+            if not part:
+                break
+            if head_prims is None:
+                head_prims = [Prim.NONE] * len(part[0].dense_head)
+            rows = [p.row_sizes() for p in part]
+            width = max(len(r) for r in rows)
+            sizes = np.array([r + [1] * (width - len(r)) for r in rows],
+                             float)
+            prim_row = head_prims + pat_prims + \
+                [Prim.NONE] * (width - len(head_prims) - len(pat_prims))
+            br = analyze_batch_rows(sizes, prim_row,
+                                    [len(r) for r in rows], spec)
+            brs.append((len(plans), br))
+            plans.extend(part)
+            e = np.concatenate((e, g * br.total_bits))
+            k, stopped = _alloc_scan_len(e, bar)
+            if stopped:
+                break
+            chunk = _ALLOC_PATIENCE
+        if not plans:
+            return None
+        stats.allocations_seen += k
+        j = int(np.argmin(e[:k]))
+        off, br = next(t for t in reversed(brs) if t[0] <= j)
+        return Candidate(plans[j].build(), br.report(j - off), float(e[j]))
+
+    score = score_batched if use_batch else score_scalar
 
     out: list[Candidate] = []
     frontier: list[tuple[Level, ...]] = [()]
@@ -189,7 +286,7 @@ def _split_chain(extent: int, mapping_chain: Sequence[int], parts: int
             return tuple(merged)
     # fallback: balanced split (prefer near-equal factors > 1)
     best: Optional[tuple[int, ...]] = None
-    for fac in F.factorizations(extent, parts):
+    for fac in F.factorizations_cached(extent, parts):
         if any(f <= 1 for f in fac):
             continue
         spread = max(fac) / min(fac)
@@ -213,60 +310,111 @@ def _divide_out(chain: Sequence[int], leaf: int) -> Optional[list[int]]:
     return [c for c in out if c > 1]
 
 
-def allocate_for_mapping(pattern: Sequence[Level], dims: dict[str, int],
-                         op_extents: dict[str, int], mapping: Mapping,
-                         leaf: Optional[dict[str, int]] = None,
-                         ) -> Optional[Format]:
-    """Derive the dimension allocation from the dataflow (§III-C2).
+_NO_FMT = object()              # fmt-cache sentinel (None is a legal value)
+
+
+def allocate_for_mappings(pattern: Sequence[Level], dims: dict[str, int],
+                          op_extents: dict[str, int],
+                          mappings: Sequence[Mapping],
+                          leaf: Optional[dict[str, int]] = None,
+                          ) -> list[Optional[Format]]:
+    """Derive the dimension allocation from the dataflow (§III-C2), for many
+    mappings of one op at once.
 
     For each dim the loop hierarchy is (#DRAM tiles, tile/spatial, spatial);
     format levels take sizes outer→inner from that chain — e.g. with M=8
     outer and M=32 inner loops, ``B(M1)-B(M2)`` becomes ``B(M1,8)-B(M2,32)``.
     ``leaf`` optionally reserves an innermost dense-block factor per dim
     (block-sparse formats); it is divided out of the chain's inner stages.
-    """
+
+    The allocation depends only on the pattern dims' (tile, spatial) extents
+    — never the loop order — so the chain split runs once per unique per-dim
+    extent pair and the format assembly once per unique factor tuple; the
+    dim-only feasibility gates (leaf divisibility, enough >1 factors) are
+    checked once for the whole batch.  Per-mapping results are identical to
+    the original scalar derivation (:func:`allocate_for_mapping` is now a
+    batch of one)."""
     leaf = leaf or {}
     per_dim_slots: dict[str, int] = {}
     for l in pattern:
         per_dim_slots[l.dim] = per_dim_slots.get(l.dim, 0) + 1
 
-    chains: dict[str, tuple[int, ...]] = {}
+    # mapping-independent feasibility + targets, once per dim
+    base: dict[str, tuple[int, int, int]] = {}   # d -> (extent, lf, target)
     for d, parts in per_dim_slots.items():
         extent = dims[d]
         lf = leaf.get(d, 1)
         if lf > 1 and extent % lf:
-            return None
+            return [None] * len(mappings)
         target = extent // lf
         if target == 1 or (parts > 1 and target < 2 ** parts):
-            return None
-        t = mapping.tile.get(d, extent)
-        u = mapping.spatial.get(d, 1)
+            return [None] * len(mappings)
+        base[d] = (extent, lf, target)
+
+    head = tuple(Level(Prim.NONE, d, dims[d]) for d in dims
+                 if d not in per_dim_slots)
+    leaves = tuple(Level(Prim.NONE, d, lf) for d, lf in leaf.items()
+                   if lf > 1 and d in per_dim_slots)
+
+    split_cache: dict[tuple, Optional[tuple[int, ...]]] = {}
+    fmt_cache: dict[tuple, Optional[Format]] = {}
+
+    def dim_split(d: str, t: int, u: int) -> Optional[tuple[int, ...]]:
+        skey = (d, t, u)
+        if skey in split_cache:
+            return split_cache[skey]
+        extent, lf, target = base[d]
         chain: list[int] = []
         if t and extent % t == 0:
             chain = [extent // t, max(t // u, 1), u]
             if lf > 1:
                 chain = _divide_out(chain, lf) or []
-        split = _split_chain(target, chain, parts)
-        if split is None:
-            return None
-        chains[d] = split
+        split = _split_chain(target, chain, per_dim_slots[d])
+        split_cache[skey] = split
+        return split
 
-    used = dict.fromkeys(per_dim_slots, 0)
-    levels: list[Level] = []
-    for l in pattern:
-        idx = used[l.dim]
-        levels.append(l.with_size(chains[l.dim][idx]))
-        used[l.dim] += 1
-    head = tuple(Level(Prim.NONE, d, dims[d]) for d in dims
-                 if d not in per_dim_slots)
-    leaves = tuple(Level(Prim.NONE, d, lf) for d, lf in leaf.items()
-                   if lf > 1 and d in per_dim_slots)
-    fmt = Format(head + tuple(levels) + leaves)
-    try:
-        fmt.validate(dims)
-    except ValueError:
-        return None
-    return fmt
+    out: list[Optional[Format]] = []
+    for mapping in mappings:
+        fkey = tuple((d, mapping.tile.get(d, base[d][0]),
+                      mapping.spatial.get(d, 1)) for d in per_dim_slots)
+        fmt = fmt_cache.get(fkey, _NO_FMT)
+        if fmt is not _NO_FMT:
+            out.append(fmt)             # type: ignore[arg-type]
+            continue
+        chains: dict[str, tuple[int, ...]] = {}
+        for d, t, u in fkey:
+            split = dim_split(d, t, u)
+            if split is None:
+                break
+            chains[d] = split
+        if len(chains) != len(per_dim_slots):
+            fmt_cache[fkey] = None
+            out.append(None)
+            continue
+        used = dict.fromkeys(per_dim_slots, 0)
+        levels: list[Level] = []
+        for l in pattern:
+            idx = used[l.dim]
+            levels.append(l.with_size(chains[l.dim][idx]))
+            used[l.dim] += 1
+        fmt = Format(head + tuple(levels) + leaves)
+        try:
+            fmt.validate(dims)
+        except ValueError:
+            fmt = None
+        fmt_cache[fkey] = fmt
+        out.append(fmt)
+    return out
+
+
+def allocate_for_mapping(pattern: Sequence[Level], dims: dict[str, int],
+                         op_extents: dict[str, int], mapping: Mapping,
+                         leaf: Optional[dict[str, int]] = None,
+                         ) -> Optional[Format]:
+    """Scalar :func:`allocate_for_mappings` — a batch of one (single source
+    of truth for the derivation rules)."""
+    return allocate_for_mappings(pattern, dims, op_extents, (mapping,),
+                                 leaf=leaf)[0]
 
 
 # ---------------------------------------------------------------------------

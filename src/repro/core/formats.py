@@ -27,6 +27,7 @@ import itertools
 import math
 from typing import Iterable, Iterator, Optional, Sequence
 
+from repro.core import memo
 from repro.core.primitives import Prim
 
 
@@ -215,10 +216,82 @@ def _divisors(x: int) -> list[int]:
     return out
 
 
-def allocate(pattern: Sequence[Level], dims: dict[str, int],
-             max_allocs: Optional[int] = None,
-             allow_dense_leaf: bool = True) -> Iterator[Format]:
-    """Enumerate dimension allocations for a pattern (Definition 2).
+_FACTORIZATIONS_CACHE: dict = memo.register({}, "factorizations")
+
+
+def factorizations_cached(extent: int, parts: int) -> tuple[tuple[int, ...], ...]:
+    """Materialized, memoized :func:`factorizations` (identical order).
+
+    The allocation planes — :func:`allocate` and the mapping-derived chain
+    splitting in :mod:`repro.core.engine` — revisit the same (extent, parts)
+    pairs constantly (tensor dims come from a handful of layer shapes), so
+    the recursive enumeration runs once per pair."""
+    return memo.get_or(
+        _FACTORIZATIONS_CACHE, (extent, parts),
+        lambda: tuple(factorizations(extent, parts)))
+
+
+def _alloc_key(opt: tuple[tuple[int, ...], Optional[int]]) -> float:
+    # Order allocations by innermost-level size proximity to ~8: the
+    # innermost compressed level dominates metadata cost per non-zero
+    # (CP/RLE field width, B group amortization), and sizes 4–16 are
+    # the sweet spot across densities — so capped/early-bailed
+    # enumeration visits the likely winners first.
+    factors, leaf = opt
+    inner = leaf if leaf is not None else factors[-1]
+    return abs(math.log2(max(inner, 1)) - 3.0)
+
+
+_ALLOC_OPTS_CACHE: dict = memo.register({}, "alloc_opts")
+
+
+def _dim_alloc_options(extent: int, k: int, allow_dense_leaf: bool
+                       ) -> tuple[tuple[tuple[int, ...], Optional[int]], ...]:
+    """Per-dim allocation options: (factors_for_slots, leaf_size or None),
+    sorted by :func:`_alloc_key`.  Depends only on (extent, slot count,
+    leaf policy), which recur for every pattern touching the dim — memoized."""
+    def build():
+        opts = [(f, None) for f in factorizations_cached(extent, k)
+                if all(x > 1 for x in f)]
+        if allow_dense_leaf:
+            opts += [(f[:-1], f[-1])
+                     for f in factorizations_cached(extent, k + 1)
+                     if all(x > 1 for x in f)]
+        opts.sort(key=_alloc_key)
+        return tuple(opts)
+    return memo.get_or(_ALLOC_OPTS_CACHE, (extent, k, allow_dense_leaf), build)
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocPlan:
+    """One dimension allocation in raw form — the hot-path view of
+    :func:`allocate` (same enumeration order).  Carries the level sizes as
+    plain integers so batch analyzers can score thousands of allocations
+    without constructing :class:`Format`/:class:`Level` objects; the full
+    format is materialized lazily via :meth:`build` for winners only."""
+
+    pattern: tuple[Level, ...]
+    dense_head: tuple[Level, ...]
+    slot_sizes: tuple[int, ...]             # per pattern slot, slot order
+    leaves: tuple[tuple[str, int], ...]     # trailing dense-leaf (dim, size)
+
+    def row_sizes(self) -> list[int]:
+        """Level sizes outer→inner: dense head + pattern slots + leaves."""
+        return ([int(l.size) for l in self.dense_head]   # type: ignore[arg-type]
+                + list(self.slot_sizes) + [s for _, s in self.leaves])
+
+    def build(self) -> Format:
+        levels = tuple(l.with_size(s)
+                       for l, s in zip(self.pattern, self.slot_sizes))
+        leaf_levels = tuple(Level(Prim.NONE, d, s) for d, s in self.leaves)
+        return Format(self.dense_head + levels + leaf_levels)
+
+
+def allocation_plans(pattern: Sequence[Level], dims: dict[str, int],
+                     max_allocs: Optional[int] = None,
+                     allow_dense_leaf: bool = True) -> Iterator[AllocPlan]:
+    """Enumerate dimension allocations for a pattern (Definition 2), as
+    lightweight :class:`AllocPlan` rows.
 
     Dims not referenced by the pattern are prepended as dense ``None``
     levels (outermost), matching the paper's treatment of uncompressed dims.
@@ -228,35 +301,20 @@ def allocate(pattern: Sequence[Level], dims: dict[str, int],
     outer levels).  Factors of 1 are disallowed (a size-1 level encodes
     nothing).
     """
+    pattern = tuple(pattern)
     per_dim_slots: dict[str, list[int]] = {}
     for i, l in enumerate(pattern):
         per_dim_slots.setdefault(l.dim, []).append(i)
 
     # per dim: list of (factors_for_slots, leaf_size or None)
-    choices: list[list[tuple[tuple[int, ...], Optional[int]]]] = []
+    choices: list[tuple[tuple[tuple[int, ...], Optional[int]], ...]] = []
     dim_order: list[str] = []
     for d, slots in per_dim_slots.items():
         if d not in dims:
             raise ValueError(f"pattern references unknown dim {d}")
-        k = len(slots)
-        opts: list[tuple[tuple[int, ...], Optional[int]]] = [
-            (f, None) for f in factorizations(dims[d], k)
-            if all(x > 1 for x in f)]
-        if allow_dense_leaf:
-            opts += [(f[:-1], f[-1]) for f in factorizations(dims[d], k + 1)
-                     if all(x > 1 for x in f)]
+        opts = _dim_alloc_options(dims[d], len(slots), allow_dense_leaf)
         if not opts:
             return  # cannot split this dim into that many >1 factors
-        # Order allocations by innermost-level size proximity to ~8: the
-        # innermost compressed level dominates metadata cost per non-zero
-        # (CP/RLE field width, B group amortization), and sizes 4–16 are
-        # the sweet spot across densities — so capped/early-bailed
-        # enumeration visits the likely winners first.
-        def _alloc_key(opt):
-            factors, leaf = opt
-            inner = leaf if leaf is not None else factors[-1]
-            return abs(math.log2(max(inner, 1)) - 3.0)
-        opts.sort(key=_alloc_key)
         choices.append(opts)
         dim_order.append(d)
 
@@ -264,17 +322,26 @@ def allocate(pattern: Sequence[Level], dims: dict[str, int],
                        if d not in per_dim_slots)
 
     count = 0
+    n = len(pattern)
     for combo in itertools.product(*choices):
         sizes: dict[int, int] = {}
-        leaves: list[Level] = []
+        leaves: list[tuple[str, int]] = []
         for d, (alloc, leaf) in zip(dim_order, combo):
             for slot, size in zip(per_dim_slots[d], alloc):
                 sizes[slot] = size
             if leaf is not None:
-                leaves.append(Level(Prim.NONE, d, leaf))
-        levels = tuple(l.with_size(sizes[i]) for i, l in enumerate(pattern))
-        fmt = Format(dense_head + levels + tuple(leaves))
+                leaves.append((d, leaf))
+        yield AllocPlan(pattern, dense_head,
+                        tuple(sizes[i] for i in range(n)), tuple(leaves))
         count += 1
-        yield fmt
         if max_allocs is not None and count >= max_allocs:
             return
+
+
+def allocate(pattern: Sequence[Level], dims: dict[str, int],
+             max_allocs: Optional[int] = None,
+             allow_dense_leaf: bool = True) -> Iterator[Format]:
+    """:func:`allocation_plans`, materialized to :class:`Format` objects."""
+    for plan in allocation_plans(pattern, dims, max_allocs=max_allocs,
+                                 allow_dense_leaf=allow_dense_leaf):
+        yield plan.build()

@@ -15,6 +15,7 @@ were constructed.  Keys used across the codebase:
     sparsity model, value_bits);
   * ``enumerate_mappings``:   ((M, N, K), value_bits, arch, ratio_i,
     ratio_w, spatial_top, orders);
+  * ``factorizations``:       (extent, parts);
   * ``_reference_cf``:        (pattern levels or named format, spec key);
   * ``_search_op``:           (op shape+sparsity+count, arch, candidate
     pair, CoSearchConfig);
@@ -22,21 +23,52 @@ were constructed.  Keys used across the codebase:
 
 Unhashable inputs (e.g. a custom ``Sparsity`` subclass) silently skip the
 cache — correctness never depends on a hit.
+
+Every registered cache carries hit/miss counters (:func:`stats`,
+:func:`stats_report`); lookups made while caching is disabled, or with a
+``None`` key, are not counted.  Counters survive :func:`clear` (so a
+cold-cache benchmark still reports its warm-up misses) and are zeroed with
+:func:`reset_stats`.
 """
 
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Callable, Iterator
+import dataclasses
+import threading
+from typing import Any, Callable, Iterator, Optional
 
 _REGISTRY: list[dict] = []
 _enabled: bool = True
 _MISS = object()                # distinguishes a cached None from a miss
+_STATS_LOCK = threading.Lock()  # counters stay exact under cosearch_multi's
+#                                 thread-sharded work-list
 
 
-def register(cache: dict) -> dict:
+@dataclasses.dataclass
+class CacheStats:
+    """Hit/miss counters for one registered cache."""
+
+    name: str
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+_STATS: dict[int, CacheStats] = {}      # id(cache) -> counters
+
+
+def register(cache: dict, name: Optional[str] = None) -> dict:
     """Register a module-level cache dict for global clear/disable."""
     _REGISTRY.append(cache)
+    _STATS[id(cache)] = CacheStats(name or f"cache{len(_REGISTRY)}")
     return cache
 
 
@@ -52,6 +84,40 @@ def set_enabled(on: bool) -> None:
 def clear() -> None:
     for c in _REGISTRY:
         c.clear()
+
+
+def note(cache: dict, hit: bool) -> None:
+    """Record a hit/miss for a registered cache that is probed manually
+    (without :func:`get_or`)."""
+    st = _STATS.get(id(cache))
+    if st is not None:
+        with _STATS_LOCK:
+            if hit:
+                st.hits += 1
+            else:
+                st.misses += 1
+
+
+def stats() -> dict[str, CacheStats]:
+    """Per-cache counters, keyed by the name given at :func:`register`."""
+    return {st.name: st for st in _STATS.values()}
+
+
+def reset_stats() -> None:
+    for st in _STATS.values():
+        st.hits = 0
+        st.misses = 0
+
+
+def stats_report(only_active: bool = True) -> str:
+    """One-line ``name=hits/lookups(rate)`` summary, for benchmark output."""
+    parts = []
+    for st in sorted(_STATS.values(), key=lambda s: s.name):
+        if only_active and not st.lookups:
+            continue
+        parts.append(f"{st.name}={st.hits}/{st.lookups}"
+                     f"({100.0 * st.hit_rate:.0f}%)")
+    return " ".join(parts) if parts else "no-cache-activity"
 
 
 @contextlib.contextmanager
@@ -79,6 +145,9 @@ def get_or(cache: dict, key: Any, compute: Callable[[], Any]) -> Any:
     except TypeError:           # unhashable component slipped into the key
         return compute()
     if hit is _MISS:
+        note(cache, False)
         hit = compute()
         cache[key] = hit
+    else:
+        note(cache, True)
     return hit

@@ -126,7 +126,36 @@ class SizeReport:
 # Expectation model
 # ---------------------------------------------------------------------------
 
-_ANALYZE_CACHE: dict = memo.register({})
+_ANALYZE_CACHE: dict = memo.register({}, "analyze")
+
+
+def gather_scalar(fn, vals: np.ndarray, as_int: bool = True,
+                  cache: Optional[dict] = None) -> np.ndarray:
+    """Evaluate an arbitrary Python scalar function over an array by unique
+    value: distribution models and bit-width rules are plain Python, but the
+    values they see in the search plane (level sizes, tile extents, block
+    products) come from small divisor sets, so ``fn`` runs once per distinct
+    value and the results are gathered back.
+
+    ``as_int`` converts each unique value to a Python ``int`` before the
+    call, matching the scalar paths (which pass exact integer block counts);
+    the values must then be integral.  ``cache`` optionally persists results
+    across calls (caller-owned dict)."""
+    if cache is None:
+        cache = {}
+    flat = vals.ravel().tolist()
+    out = np.empty(len(flat))
+    get = cache.get
+    for i, v in enumerate(flat):
+        k = int(v) if as_int else v
+        hit = get(k, _GATHER_MISS)
+        if hit is _GATHER_MISS:
+            hit = cache[k] = fn(k)
+        out[i] = hit
+    return out.reshape(vals.shape)
+
+
+_GATHER_MISS = object()
 
 
 def analyze(fmt: Format, spec: TensorSpec) -> SizeReport:
@@ -187,6 +216,186 @@ def _analyze_impl(fmt: Format, spec: TensorSpec) -> SizeReport:
                       metadata_bits=float(sum(meta)),
                       decode_ops=decode,
                       per_level=tuple(meta))
+
+
+# ---------------------------------------------------------------------------
+# Batched expectation model (SoA over many allocations of one tensor)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchSizeReport:
+    """Vectorized :class:`SizeReport` over ``m`` formats of one tensor.
+
+    Arrays are length ``m``; ``per_level`` is padded to the deepest format
+    with zero-bit levels.  :meth:`report` reconstitutes the exact scalar
+    :class:`SizeReport` for one row."""
+
+    payload_bits: np.ndarray
+    metadata_bits: np.ndarray
+    decode_ops: np.ndarray
+    per_level: np.ndarray               # (m, L) padded with 0.0
+    n_levels: tuple[int, ...]           # true level count per format
+
+    @property
+    def total_bits(self) -> np.ndarray:
+        return self.payload_bits + self.metadata_bits
+
+    def __len__(self) -> int:
+        return len(self.n_levels)
+
+    def report(self, i: int) -> SizeReport:
+        k = self.n_levels[i]
+        return SizeReport(
+            payload_bits=float(self.payload_bits[i]),
+            metadata_bits=float(self.metadata_bits[i]),
+            decode_ops=float(self.decode_ops[i]),
+            per_level=tuple(float(b) for b in self.per_level[i, :k]))
+
+
+_PRIM_CODE = {Prim.B: 0, Prim.CP: 1, Prim.RLE: 2, Prim.UOP: 3, Prim.NONE: 4}
+_PRIM_BY_CODE = (Prim.B, Prim.CP, Prim.RLE, Prim.UOP, Prim.NONE)
+_DECODE_BY_CODE = np.array([DECODE_COST[p] for p in _PRIM_BY_CODE])
+_B_CODE, _CP_CODE, _RLE_CODE = _PRIM_CODE[Prim.B], _PRIM_CODE[Prim.CP], \
+    _PRIM_CODE[Prim.RLE]
+_UOP_CODE, _NONE_CODE = _PRIM_CODE[Prim.UOP], _PRIM_CODE[Prim.NONE]
+
+
+def analyze_batch(fmts: Sequence[Format], spec: TensorSpec,
+                  validate: bool = True) -> BatchSizeReport:
+    """Expected compressed sizes of ``spec`` under many formats at once.
+
+    Bit-identical to per-format :func:`analyze`: the level walk runs
+    column-wise over a (format, level) matrix padded with size-1 ``None``
+    levels (a no-op for every invariant), with the same operations in the
+    same order, and the Python-level distribution/bit-width functions
+    (``prob_nonempty`` / ``expected_nnz`` / :func:`clog2`) evaluated once
+    per unique operand via :func:`gather_scalar`.  ``validate=False`` skips
+    per-format validation for callers whose formats are correct by
+    construction (:func:`repro.core.formats.allocate`)."""
+    m = len(fmts)
+    if m == 0:
+        z = np.zeros(0)
+        return BatchSizeReport(z, z, z, np.zeros((0, 1)), ())
+    if validate:
+        for f in fmts:
+            f.validate(spec.dims)
+    n_levels = tuple(len(f.levels) for f in fmts)
+    L = max(n_levels)
+    sizes = np.ones((m, L))
+    prims = np.full((m, L), _NONE_CODE, np.int64)
+    for i, f in enumerate(fmts):
+        for j, l in enumerate(f.levels):
+            if l.prim is Prim.CUSTOM:
+                raise ValueError("Custom primitive requires a custom bit "
+                                 "model; analyze_batch does not support it")
+            sizes[i, j] = int(l.size)   # type: ignore[arg-type]
+            prims[i, j] = _PRIM_CODE[l.prim]
+    return _analyze_rows(sizes, prims, n_levels, spec)
+
+
+def analyze_batch_rows(sizes: np.ndarray, prims: Sequence[Prim],
+                       n_levels: Sequence[int], spec: TensorSpec
+                       ) -> BatchSizeReport:
+    """Raw-array entry point of :func:`analyze_batch` for batches whose
+    formats all share one primitive row (every allocation of one pattern:
+    identical dense head, identical pattern levels, ``None`` leaves and
+    padding).  ``sizes`` is the (m, L) level-size matrix padded with 1s;
+    ``prims`` the shared per-level primitive row; ``n_levels`` the true
+    level count per row.  Lets the hot path skip building ``Format``
+    objects for allocations that lose the scan."""
+    m, L = sizes.shape
+    if len(prims) != L:
+        raise ValueError(f"prim row length {len(prims)} != {L} levels")
+    if any(p is Prim.CUSTOM for p in prims):
+        raise ValueError("Custom primitive requires a custom bit model; "
+                         "analyze_batch_rows does not support it")
+    row = np.array([_PRIM_CODE[p] for p in prims], np.int64)
+    return _analyze_rows(sizes, row.reshape(1, L), tuple(n_levels), spec)
+
+
+def _analyze_rows(sizes: np.ndarray, prims: np.ndarray,
+                  n_levels: tuple[int, ...], spec: TensorSpec
+                  ) -> BatchSizeReport:
+    """Shared level walk; ``prims`` is (m, L), or (1, L) when every row has
+    the same primitive at every level."""
+    sp = spec.sparsity
+    m, L = sizes.shape
+
+    # inner[:, j] = elements covered by one unit at level j (suffix product)
+    inner = np.ones((m, L + 1))
+    for j in range(L - 1, -1, -1):
+        inner[:, j] = inner[:, j + 1] * sizes[:, j]
+    # dense positions through level j (prefix product, sequential like the
+    # scalar ``dense_positions *= s``)
+    dp = np.multiply.accumulate(sizes, axis=1)
+
+    p_cache: dict = {}
+    cl_cache: dict = {}
+    nnz_cache: dict = {}
+    stored = np.ones(m)
+    meta_total = np.zeros(m)
+    decode = np.zeros(m)
+    per_level = np.zeros((m, L))
+    zeros = np.zeros(m)
+    uniform = prims.shape[0] == 1
+    for j in range(L):
+        s = sizes[:, j]
+        code = prims[:, j]
+        c0 = int(code[0])
+        # Allocations of one pattern share the prim at every column (same
+        # dense head, same pattern levels, NONE leaves/padding), so the
+        # homogeneous fast paths below are the common case.
+        homo = uniform or bool((code == c0).all())
+        if homo and c0 == _NONE_CODE:
+            # dense level: zero metadata bits, every child kept
+            stored = stored * s
+            continue
+        nonempty = dp[:, j] * gather_scalar(sp.prob_nonempty,
+                                            inner[:, j + 1], cache=p_cache)
+        if homo:
+            if c0 == _B_CODE:
+                bits = stored * s
+            elif c0 == _CP_CODE:
+                bits = nonempty * gather_scalar(clog2, s, cache=cl_cache)
+            elif c0 == _RLE_CODE:
+                bits = nonempty * gather_scalar(clog2, s + 1.0,
+                                                cache=cl_cache)
+            else:                       # UOP
+                child_nnz = gather_scalar(sp.expected_nnz, inner[:, j],
+                                          cache=nnz_cache)
+                field = gather_scalar(clog2, child_nnz + 1.0, as_int=False)
+                bits = stored * (s + 1.0) * field
+            stored_next = nonempty
+            dc = DECODE_COST[_PRIM_BY_CODE[c0]]
+        else:                           # mixed column: general path
+            total_positions = stored * s
+            if (code == _UOP_CODE).any():
+                child_nnz = gather_scalar(sp.expected_nnz, inner[:, j],
+                                          cache=nnz_cache)
+                field = gather_scalar(clog2, child_nnz + 1.0, as_int=False)
+                uop_bits = stored * (s + 1.0) * field
+            else:
+                uop_bits = zeros
+            bits = np.choose(code, (
+                total_positions,                                      # B
+                nonempty * gather_scalar(clog2, s, cache=cl_cache),   # CP
+                nonempty * gather_scalar(clog2, s + 1.0,
+                                         cache=cl_cache),             # RLE
+                uop_bits,                                             # UOP
+                zeros,                                                # NONE
+            ))
+            stored_next = np.where(code != _NONE_CODE, nonempty,
+                                   total_positions)
+            dc = _DECODE_BY_CODE[code]
+        per_level[:, j] = bits
+        meta_total = meta_total + bits
+        decode = decode + dc * bits
+        stored = stored_next
+
+    payload = stored * spec.value_bits
+    return BatchSizeReport(payload_bits=payload, metadata_bits=meta_total,
+                           decode_ops=decode, per_level=per_level,
+                           n_levels=n_levels)
 
 
 # ---------------------------------------------------------------------------

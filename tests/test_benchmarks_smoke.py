@@ -1,0 +1,36 @@
+"""Benchmark-driver smoke: ``benchmarks/run.py --quick`` must run clean.
+
+The quick mode pushes a tiny model through one arch in every suite that
+implements it (fig11 / tableI / dimo — the search-plane drivers this repo's
+perf claims rest on), asserting old-vs-new equivalence along the way, so
+the benchmark drivers can't silently rot between full runs.
+"""
+
+import pytest
+
+from repro.core import memo
+
+
+def test_run_quick_smoke(capsys):
+    from benchmarks import run as bench_run
+    memo.clear()
+    memo.reset_stats()
+    failures = bench_run.main(["--quick"])
+    out = capsys.readouterr().out
+    assert failures == 0, f"quick benchmark suites failed:\n{out}"
+    # the three quick-capable suites emitted their headline rows
+    assert "fig11_avg_saving" in out
+    assert "engine_avg" in out
+    assert "evaluator_avg" in out
+    assert "tableI_fixed_avg" in out
+    assert "dimo_batch_avg" in out
+    # cache effectiveness is surfaced
+    assert "memo_stats_" in out
+
+
+def test_run_quick_skips_suites_without_quick_mode(capsys):
+    from benchmarks import run as bench_run
+    failures = bench_run.main(["kernels", "--quick"])
+    out = capsys.readouterr().out
+    assert failures == 0
+    assert "skipped (no quick mode)" in out

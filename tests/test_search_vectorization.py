@@ -1,0 +1,288 @@
+"""Vectorized search-plane correctness (PR 2).
+
+Pins the tentpole's contract: every batched hot path — allocation scoring
+(``analyze_batch`` / ``analyze_batch_rows`` behind ``generate_candidates``),
+mapping-derived allocation (``allocate_for_mappings``), the DiMO descent
+replay, and the sharded ``cosearch_multi`` — is BIT-identical to the scalar
+reference it replaces, counters included.  Plus ``memo.stats()`` counter
+semantics and the ``SearchError`` failure mode.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import memo
+from repro.core.arch import ARCH2, ARCH3
+from repro.core.baselines import dimo_like_search
+from repro.core.cosearch import (CoSearchConfig, SearchError, cosearch,
+                                 cosearch_multi)
+from repro.core.dataflow import Mapping, enumerate_mappings
+from repro.core.engine import (EngineConfig, SearchStats,
+                               allocate_for_mapping, allocate_for_mappings,
+                               generate_candidates)
+from repro.core.formats import Level, allocate, enumerate_patterns
+from repro.core.primitives import Prim
+from repro.core.sparsity import (NM, Bernoulli, TensorSpec, analyze,
+                                 analyze_batch)
+from repro.core.workload import LLMSpec, MatMul, Workload, alexnet, build_llm
+
+FAST = CoSearchConfig(engine=EngineConfig(max_levels=2,
+                                          max_allocs_per_pattern=16),
+                      spatial_top=2, max_pairs=6)
+
+
+def _design_fingerprint(res):
+    return (res.design.pattern_i, res.design.pattern_w, res.design.energy,
+            res.design.cycles, res.evaluations,
+            tuple((str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+                  for o in res.design.ops))
+
+
+# ---------------------------------------------------------------------------
+# analyze_batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sp", [Bernoulli(0.1), Bernoulli(0.5), NM(2, 4)])
+def test_analyze_batch_bit_identical_to_scalar(sp):
+    """∀ allocations of every 1–2-level pattern: one analyze_batch pass ==
+    per-format analyze, exactly (payload/meta/decode/per-level)."""
+    spec = TensorSpec({"M": 256, "N": 512}, sp)
+    for pat in list(enumerate_patterns(["M", "N"], max_levels=2))[:40]:
+        fmts = list(allocate(pat, spec.dims, max_allocs=24))
+        if not fmts:
+            continue
+        br = analyze_batch(fmts, spec)
+        assert len(br) == len(fmts)
+        with memo.disabled():
+            for i, f in enumerate(fmts):
+                want = analyze(f, spec)
+                got = br.report(i)
+                assert got.payload_bits == want.payload_bits
+                assert got.metadata_bits == want.metadata_bits
+                assert got.decode_ops == want.decode_ops
+                assert got.per_level == want.per_level
+
+
+def test_analyze_batch_mixed_patterns():
+    """Heterogeneous batches (formats from different patterns — exercises
+    the mixed-column path) still match scalar analyze exactly."""
+    spec = TensorSpec({"M": 256, "N": 512}, Bernoulli(0.3))
+    fmts = []
+    for pat in list(enumerate_patterns(["M", "N"], max_levels=2))[:24]:
+        fmts.extend(allocate(pat, spec.dims, max_allocs=3))
+    br = analyze_batch(fmts, spec)
+    with memo.disabled():
+        for i, f in enumerate(fmts):
+            want = analyze(f, spec)
+            got = br.report(i)
+            assert (got.payload_bits, got.metadata_bits, got.decode_ops,
+                    got.per_level) == (want.payload_bits, want.metadata_bits,
+                                       want.decode_ops, want.per_level)
+
+
+def test_analyze_batch_validates_and_rejects_bad_formats():
+    spec = TensorSpec({"M": 8, "N": 8}, Bernoulli(0.5))
+    bad = __import__("repro.core.formats", fromlist=["Format"]).Format(
+        (Level(Prim.B, "M", 4), Level(Prim.NONE, "N", 8)))   # M covers 4 != 8
+    with pytest.raises(ValueError):
+        analyze_batch([bad], spec)
+
+
+# ---------------------------------------------------------------------------
+# generate_candidates: batched vs scalar scoring
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sp,penalize", [
+    (Bernoulli(0.1), True), (Bernoulli(0.1), False),
+    (NM(2, 4), True), (Bernoulli(0.75), True),
+])
+def test_generate_candidates_batch_matches_scalar(sp, penalize):
+    """Same candidates, same EqData, same SearchStats counters (the
+    early-exit pruning is replayed post hoc on the batched scores)."""
+    spec = TensorSpec({"M": 512, "N": 1024}, sp)
+    cfg = EngineConfig(max_levels=3, max_allocs_per_pattern=48)
+    with memo.disabled():
+        s_old, s_new = SearchStats(), SearchStats()
+        old = generate_candidates(spec, cfg, penalize=penalize, stats=s_old,
+                                  use_batch=False)
+        new = generate_candidates(spec, cfg, penalize=penalize, stats=s_new,
+                                  use_batch=True)
+    assert [(str(c.fmt), c.eq_data, c.report) for c in old] == \
+           [(str(c.fmt), c.eq_data, c.report) for c in new]
+    assert (s_old.patterns_seen, s_old.allocations_seen,
+            s_old.pruned_patterns) == \
+           (s_new.patterns_seen, s_new.allocations_seen,
+            s_new.pruned_patterns)
+
+
+# ---------------------------------------------------------------------------
+# allocate_for_mappings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern,leaf", [
+    ((Level(Prim.B, "M"), Level(Prim.B, "M")), None),
+    ((Level(Prim.B, "N"), Level(Prim.CP, "M")), None),
+    ((Level(Prim.B, "M"),), {"M": 4}),
+    ((Level(Prim.UOP, "M"), Level(Prim.CP, "N")), None),
+])
+def test_allocate_for_mappings_matches_scalar(pattern, leaf):
+    """Batched derivation over a real mapping set == per-mapping scalar
+    derivation (including failures → None)."""
+    op = MatMul("m", 128, 256, 64, Bernoulli(0.5), Bernoulli(0.3))
+    dims = {"M": op.M, "N": op.N}
+    mappings = list(enumerate_mappings(op, ARCH2, spatial_top=2))[:120]
+    batch = allocate_for_mappings(pattern, dims, dims, mappings, leaf=leaf)
+    assert len(batch) == len(mappings)
+    got_some = False
+    for mapping, got in zip(mappings, batch):
+        want = allocate_for_mapping(pattern, dims, dims, mapping, leaf=leaf)
+        if want is None:
+            assert got is None
+        else:
+            assert got is not None and got.levels == want.levels
+            got_some = True
+    assert got_some, "degenerate test: no mapping produced an allocation"
+
+
+def test_allocate_for_mappings_infeasible_dim_short_circuits():
+    # 3 slots on a dim that cannot give three >1 factors → all None
+    pattern = (Level(Prim.B, "M"), Level(Prim.B, "M"), Level(Prim.B, "M"))
+    dims = {"M": 6, "N": 8}
+    mapping = Mapping(spatial={"M": 1, "N": 1, "K": 1},
+                      tile={"M": 6, "N": 8, "K": 1},
+                      order=("M", "N", "K"))
+    assert allocate_for_mappings(pattern, dims, dims, [mapping] * 3) == \
+        [None, None, None]
+
+
+# ---------------------------------------------------------------------------
+# co-search: full legacy path (scalar engine + per-mapping derivation +
+# scalar evaluator) vs the fully batched path
+# ---------------------------------------------------------------------------
+
+def test_cosearch_legacy_path_matches_batched():
+    wl = build_llm(LLMSpec("vec-test", 1, 128, 256, 4), seq=64,
+                   act_density=0.4, w_density=0.25)
+    scalar_cfg = dataclasses.replace(FAST, use_batch=False)
+    with memo.disabled():
+        a = _design_fingerprint(cosearch(wl, ARCH3, scalar_cfg))
+        b = _design_fingerprint(cosearch(wl, ARCH3, FAST))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# DiMO descent replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_dimo_batched_descent_bit_identical(seed):
+    """Same seed → same RNG stream → bit-identical design and eval count
+    between the scalar walk and the batched replay."""
+    wl = alexnet()
+    with memo.disabled():
+        old = dimo_like_search(wl, ARCH3, FAST, restarts=4, iters=80,
+                               seed=seed, use_batch=False)
+        new = dimo_like_search(wl, ARCH3, FAST, restarts=4, iters=80,
+                               seed=seed, use_batch=True)
+    assert _design_fingerprint(old) == _design_fingerprint(new)
+    assert old.evaluations == new.evaluations == 4 * (1 + 80 // 4) * len(wl.ops)
+
+
+# ---------------------------------------------------------------------------
+# cosearch_multi: sharded work-list + per-model stats
+# ---------------------------------------------------------------------------
+
+def _two_tiny_workloads():
+    wl_a = build_llm(LLMSpec("A", 2, 256, 1024, 4), seq=64,
+                     act_density=0.2, w_density=0.2)
+    wl_b = build_llm(LLMSpec("B", 2, 256, 1024, 4), seq=64,
+                     act_density=0.8, w_density=0.8)
+    return wl_a, wl_b
+
+
+def test_cosearch_multi_workers_deterministic():
+    wls = _two_tiny_workloads()
+    imp = {"A": 99.0, "B": 1.0}
+    memo.clear()
+    d1, k1, v1 = cosearch_multi(list(wls), ARCH3, imp, FAST)
+    memo.clear()
+    d2, k2, v2 = cosearch_multi(list(wls), ARCH3, imp, FAST, workers=4)
+    assert (k1, v1) == (k2, v2)
+    assert set(d1) == set(d2)
+    for name in d1:
+        assert _design_fingerprint(d1[name])[:4] == \
+            _design_fingerprint(d2[name])[:4]
+
+
+def test_cosearch_multi_per_model_stats_not_aliased():
+    """Each model's SearchResult reports its own candidate-generation
+    counters (the seed handed ONE shared mutable SearchStats to every
+    result)."""
+    wls = _two_tiny_workloads()
+    designs, _, _ = cosearch_multi(list(wls), ARCH3,
+                                   {"A": 1.0, "B": 1.0}, FAST)
+    sa, sb = designs["A"].stats, designs["B"].stats
+    assert sa is not sb
+    # each model generated candidates for both roles on its own counters
+    assert sa.patterns_seen > 0 and sb.patterns_seen > 0
+    # mutating one must not affect the other (true snapshot)
+    sa.patterns_seen += 1000
+    assert sb.patterns_seen < sa.patterns_seen
+
+
+# ---------------------------------------------------------------------------
+# SearchError
+# ---------------------------------------------------------------------------
+
+def _impossible_arch():
+    tiny_glb = dataclasses.replace(ARCH3.levels[1], capacity_bits=8.0)
+    return dataclasses.replace(
+        ARCH3, name="tiny-glb",
+        levels=(ARCH3.levels[0], tiny_glb, ARCH3.levels[2]))
+
+
+def test_cosearch_raises_search_error_with_context():
+    wl = Workload("doomed", (MatMul("big", 64, 64, 64,
+                                    Bernoulli(0.5), Bernoulli(0.5)),))
+    with pytest.raises(SearchError) as ei:
+        cosearch(wl, _impossible_arch(), FAST,
+                 fixed_formats=("Bitmap", "Bitmap"))
+    assert ei.value.op == "big"
+    assert "big" in str(ei.value)
+
+
+def test_cosearch_multi_raises_search_error():
+    wl = Workload("doomed", (MatMul("big", 64, 64, 64,
+                                    Bernoulli(0.5), Bernoulli(0.5)),))
+    with pytest.raises(SearchError) as ei:
+        cosearch_multi([wl], _impossible_arch(), {"doomed": 1.0}, FAST)
+    assert ei.value.op == "big"
+
+
+# ---------------------------------------------------------------------------
+# memo stats
+# ---------------------------------------------------------------------------
+
+def test_memo_stats_counts_hits_and_misses():
+    cache = memo.register({}, "stats-test-cache")
+    memo.reset_stats()
+    memo.get_or(cache, "k", lambda: 1)          # miss
+    memo.get_or(cache, "k", lambda: 1)          # hit
+    memo.get_or(cache, None, lambda: 2)         # keyless: not counted
+    with memo.disabled():
+        memo.get_or(cache, "k", lambda: 3)      # disabled: not counted
+    st = memo.stats()["stats-test-cache"]
+    assert (st.hits, st.misses, st.lookups) == (1, 1, 2)
+    assert st.hit_rate == 0.5
+    # manual probes via note()
+    memo.note(cache, True)
+    memo.note(cache, False)
+    assert (st.hits, st.misses) == (2, 2)
+    # counters survive clear(), reset with reset_stats()
+    memo.clear()
+    assert memo.stats()["stats-test-cache"].lookups == 4
+    memo.reset_stats()
+    assert memo.stats()["stats-test-cache"].lookups == 0
+    assert "stats-test-cache" in memo.stats_report(only_active=False)
