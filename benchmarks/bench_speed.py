@@ -8,9 +8,11 @@ re-implementation is itself far faster than real Sparseloop (no YAML / no
 process spawning / shared evaluator), so expect smaller but structural >1×
 ratios here, plus the evaluation-count ratio which is machine-independent.
 
-Old-vs-new rows (``evaluator_*``, ``engine_*``): the seed scalar paths (all
-caches bypassed) against the vectorized paths — results are asserted
-bit-identical, so the ratios are pure evaluator/engine engineering.
+Old-vs-new rows (``evaluator_*``, ``engine_*``, ``stepwise_batch_*``): the
+seed scalar paths (all caches bypassed) against the vectorized paths —
+results are asserted bit-identical, so the ratios are pure evaluator/engine/
+sweep engineering.  Search-mode budgets are COUNT-based
+(``budget_pairs_per_op``) so every row reproduces exactly run-to-run.
 ``memo_stats_*`` rows surface cache effectiveness (hits/lookups per cache).
 """
 
@@ -28,8 +30,9 @@ from repro.core.baselines import stepwise_search
 from repro.core.cosearch import CoSearchConfig, cosearch
 from repro.core.engine import EngineConfig, SearchStats, generate_candidates
 from repro.core.sparsity import NM, Bernoulli, TensorSpec
-from repro.core.workload import (LLAMA2_13B, LLAMA2_7B, LLMSpec, OPT_6_7B,
-                                 OPT_13B, OPT_30B, build_llm)
+from repro.core.workload import (LLAMA2_13B, LLAMA2_7B, LLMSpec, MatMul,
+                                 OPT_6_7B, OPT_13B, OPT_30B, Workload,
+                                 build_llm)
 
 MODELS = {"LLaMA2-7B": LLAMA2_7B, "LLaMA2-13B": LLAMA2_13B,
           "OPT-6.7B": OPT_6_7B, "OPT-13B": OPT_13B, "OPT-30B": OPT_30B}
@@ -129,9 +132,59 @@ def run_evaluator_comparison(quick: bool = False) -> None:
          f"throughput={np.mean(s_e):.0f}ev/s (target >=5x)")
 
 
+def run_stepwise_comparison(quick: bool = False) -> None:
+    """Old-vs-new Search-mode stepwise sweep (the Table-I baseline): the
+    seed per-pair loop (use_batch=False, caches bypassed) against the
+    vectorized sweep (cold caches), under the same count budget.  Designs,
+    evaluation counts, and the pair visit order are asserted identical —
+    the ratio is pure sweep engineering (batched side compilation,
+    ratio-vector legality, gathered chunk evaluation)."""
+    if quick:
+        ops = (MatMul("m", 64, 96, 64, Bernoulli(0.75), Bernoulli(0.75)),)
+        budget = 200
+    else:
+        # two representative LLaMA2-7B layers at the paper's 0.75/0.75;
+        # the budget is large enough that the batch path's per-op fixed
+        # costs (side compile + fetch tables) amortize as they would in a
+        # full 600x600 sweep
+        ops = (MatMul("attn_proj", 2048, 4096, 4096,
+                      Bernoulli(0.75), Bernoulli(0.75)),
+               MatMul("fc1", 2048, 4096, 11008,
+                      Bernoulli(0.75), Bernoulli(0.75)))
+        budget = 4000
+    wl = Workload("stepwise-bench", ops)
+    log_old: list = []
+    log_new: list = []
+    with memo.disabled():
+        t0 = time.perf_counter()
+        old = stepwise_search(wl, ALL_ARCHS[2], CFG, search_formats=True,
+                              budget_pairs_per_op=budget, use_batch=False,
+                              pair_log=log_old)
+        t_old = time.perf_counter() - t0
+    memo.clear()                         # cold caches: honest new-path time
+    t0 = time.perf_counter()
+    new = stepwise_search(wl, ALL_ARCHS[2], CFG, search_formats=True,
+                          budget_pairs_per_op=budget, use_batch=True,
+                          pair_log=log_new)
+    t_new = time.perf_counter() - t0
+    assert log_old == log_new, "batched sweep changed the pair visit order"
+    assert old.evaluations == new.evaluations, "batched sweep changed evals"
+    assert old.design.edp == new.design.edp and \
+        [(str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+         for o in old.design.ops] == \
+        [(str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+         for o in new.design.ops], "batched sweep changed designs"
+    tr = t_old / max(t_new, 1e-9)
+    target = "smoke budget" if quick else "target >=10x"
+    emit("stepwise_batch_search", t_new * 1e6,
+         f"scalar/batch time={tr:.1f}x pairs={len(log_new)} "
+         f"evals={new.evaluations} ({target})")
+
+
 def run(quick: bool = False) -> None:
     run_engine_comparison(quick=quick)
     run_evaluator_comparison(quick=quick)
+    run_stepwise_comparison(quick=quick)
     t_ratios, e_ratios = [], []
     archs = ALL_ARCHS[2:3] if quick else ALL_ARCHS
     models = ({"tiny": TINY} if quick else MODELS).items()
@@ -157,7 +210,8 @@ def run(quick: bool = False) -> None:
          "(paper vs real Sparseloop: 2248.3x)")
     _emit_memo_stats("tableI_fixed")
 
-    # Search mode on one arch (budgeted stepwise sweep is the slow part)
+    # Search mode on one arch (budgeted stepwise sweep is the slow part);
+    # the count-based budget keeps the row reproducible run-to-run
     s_t, s_e, s_q = [], [], []
     search_models = ("tiny",) if quick else ("LLaMA2-7B", "OPT-6.7B")
     for name in search_models:
@@ -167,7 +221,7 @@ def run(quick: bool = False) -> None:
                        act_density=0.75, w_density=0.75)
         prog = cosearch(wl, ALL_ARCHS[2], CFG)
         step = stepwise_search(wl, ALL_ARCHS[2], CFG, search_formats=True,
-                               budget_s_per_op=0.5 if quick else 3.0)
+                               budget_pairs_per_op=150 if quick else 1500)
         s_t.append(step.runtime_s / max(prog.runtime_s, 1e-9))
         s_e.append(step.evaluations / max(prog.evaluations, 1))
         s_q.append(step.design.edp / prog.design.edp)

@@ -1,9 +1,9 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission (+ row collection)."""
 
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 
 def timed(fn: Callable, *args, repeat: int = 1, **kw):
@@ -15,8 +15,22 @@ def timed(fn: Callable, *args, repeat: int = 1, **kw):
     return out, dt
 
 
+_COLLECTOR: Optional[list] = None
+
+
+def set_collector(rows: Optional[list]) -> None:
+    """Install a list that :func:`emit` mirrors every row into (as dicts) —
+    how ``benchmarks/run.py --json`` captures the machine-readable record.
+    Pass ``None`` to detach."""
+    global _COLLECTOR
+    _COLLECTOR = rows
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    if _COLLECTOR is not None:
+        _COLLECTOR.append({"name": name, "us_per_call": us_per_call,
+                           "derived": derived})
 
 
 # Fig. 10 activation/weight density pairs.  Sources: [4] (ReLU Strikes

@@ -7,22 +7,35 @@ dry-run artifacts (benchmarks/roofline.py builds the table; run
 ``--quick`` runs a smoke pass (tiny model, one arch, reduced iterations)
 through every suite whose ``run`` accepts a ``quick`` flag and skips the
 rest — exercised by a tier-1 test so the benchmark drivers can't silently
-rot.  ``python benchmarks/run.py [suite-substring] [--quick]``.
+rot.  ``--json PATH`` additionally writes every emitted row plus per-suite
+wall-clocks to PATH as JSON; the convention across PRs is ``BENCH_<n>.json``
+(n = PR number), so the perf trajectory stays machine-readable.
+``python benchmarks/run.py [suite-substring] [--quick] [--json PATH]``.
 """
 
 from __future__ import annotations
 
 import inspect
+import json
+import os
 import sys
 import time
 import traceback
+
+# direct `python benchmarks/run.py` bootstraps its own import roots (pytest
+# gets the same paths from pytest.ini's `pythonpath = src .`)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main(argv=None) -> int:
     from benchmarks import (bench_dimo, bench_energy_validation,
                             bench_fig5_payload, bench_fig6_penalty,
                             bench_format_opt, bench_formats_feasibility,
-                            bench_kernels, bench_multimodel, bench_speed)
+                            bench_kernels, bench_multimodel, bench_speed,
+                            common)
     suites = [
         ("fig5", bench_fig5_payload.run),
         ("fig6", bench_fig6_penalty.run),
@@ -37,27 +50,49 @@ def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     quick = "--quick" in argv
     argv = [a for a in argv if a != "--quick"]
+    json_path = None
+    if "--json" in argv:
+        k = argv.index("--json")
+        if k + 1 >= len(argv):
+            print("error: --json requires a PATH", file=sys.stderr)
+            return 1
+        json_path = argv[k + 1]
+        del argv[k:k + 2]
     only = argv[0] if argv else None
+    rows: list = []
+    suite_s: dict[str, float] = {}
+    if json_path is not None:
+        common.set_collector(rows)
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in suites:
-        if only and only not in name:
-            continue
-        kwargs = {}
-        if quick:
-            if "quick" not in inspect.signature(fn).parameters:
-                print(f"# suite {name} skipped (no quick mode)", flush=True)
+    try:
+        for name, fn in suites:
+            if only and only not in name:
                 continue
-            kwargs["quick"] = True
-        t0 = time.perf_counter()
-        try:
-            fn(**kwargs)
-        except Exception:
-            failures += 1
-            print(f"{name},0,FAILED")
-            traceback.print_exc()
-        print(f"# suite {name} done in {time.perf_counter()-t0:.1f}s",
-              flush=True)
+            kwargs = {}
+            if quick:
+                if "quick" not in inspect.signature(fn).parameters:
+                    print(f"# suite {name} skipped (no quick mode)",
+                          flush=True)
+                    continue
+                kwargs["quick"] = True
+            t0 = time.perf_counter()
+            try:
+                fn(**kwargs)
+            except Exception:
+                failures += 1
+                common.emit(name, 0.0, "FAILED")   # mirrored into --json
+                traceback.print_exc()
+            suite_s[name] = time.perf_counter() - t0
+            print(f"# suite {name} done in {suite_s[name]:.1f}s", flush=True)
+    finally:
+        if json_path is not None:
+            common.set_collector(None)
+            with open(json_path, "w") as f:
+                json.dump({"rows": rows, "suite_s": suite_s,
+                           "quick": quick, "failures": failures},
+                          f, indent=1)
+            print(f"# wrote {len(rows)} rows to {json_path}", flush=True)
     return failures
 
 

@@ -16,8 +16,24 @@ rather than implementation differences:
 
 In "Search" mode the baseline additionally sweeps formats × dimension
 allocations exhaustively (no complexity penalty, no mapping-derived
-allocation), under a wall-clock budget per MatMul — mirroring the paper's
-20-minute-per-MatMul Sparseloop budget.
+allocation), under a per-MatMul budget — either wall-clock
+(``budget_s_per_op``, mirroring the paper's 20-minute-per-MatMul Sparseloop
+budget) or deterministic pair-count (``budget_pairs_per_op``, what the
+benchmarks and tests use so runs reproduce exactly).
+
+``use_batch=True`` (default) runs the whole sweep vectorized: the side
+format populations are enumerated as :class:`~repro.core.formats.AllocPlan`
+rows and compiled in one :func:`~repro.core.sparsity.analyze_plans` pass
+per pattern group, the post-hoc legality check runs as a
+:func:`~repro.core.dataflow.tile_fits_batch` ratio-vector predicate over
+(pair, tile) matrices, and (mapping, format-pair) chunks score through
+single :func:`~repro.core.costmodel.evaluate_batch` calls.  The per-op
+budget cutoff replays deterministically post hoc, so under the count-based
+budget the batch path visits the same pairs, picks the same designs, and
+reports the same ``evaluations`` as the seed scalar loop
+(``use_batch=False``, kept as the benchmark reference) — the baseline keeps
+its workflow-structure costs (wide sweep, re-modeling, correction loops)
+but not our Python overhead, so Table-I ratios stay structural.
 
 :func:`dimo_like_search` models DiMO-Sparse's gradient-free iterative tuning
 on a preset format (CNN workloads): random-restart coordinate descent over
@@ -36,13 +52,19 @@ import numpy as np
 
 from repro.core.arch import HardwareConfig
 from repro.core.cosearch import (CoSearchConfig, DesignPoint, OpDesign,
-                                 SearchResult, _fixed_candidate, output_cf)
-from repro.core.costmodel import (compile_format, dense_format, evaluate,
-                                  evaluate_batch)
-from repro.core.dataflow import Mapping, enumerate_mappings, tile_fits
+                                 SearchError, SearchResult, _fixed_candidate,
+                                 output_cf)
+from repro.core.costmodel import (CompiledFormat, compile_format,
+                                  compile_format_from_report, dense_format,
+                                  evaluate, evaluate_batch,
+                                  evaluate_batch_gather, format_fetch_table,
+                                  mapping_ctx, pack_mappings)
+from repro.core.dataflow import (Mapping, enumerate_mappings, tile_fits,
+                                 tile_fits_batch)
 from repro.core.engine import SearchStats
-from repro.core.formats import Format, allocate, enumerate_patterns, standard_formats
-from repro.core.sparsity import TensorSpec, analyze
+from repro.core.formats import (AllocPlan, Format, allocation_plans,
+                                enumerate_patterns, standard_formats)
+from repro.core.sparsity import TensorSpec, analyze_plans
 from repro.core.workload import MatMul, Workload
 
 
@@ -57,11 +79,17 @@ def _fmt_or_none(name: Optional[str], dims: dict[str, int]) -> Optional[Format]:
     return standard_formats(dims)[name]
 
 
+_PAIR_CHUNK = 128               # format pairs per vectorized sweep chunk
+
+
 def stepwise_search(workload: Workload, arch: HardwareConfig,
                     cfg: CoSearchConfig = CoSearchConfig(),
                     fixed_formats: Optional[tuple[Optional[str], Optional[str]]] = ("Bitmap", "Bitmap"),
                     search_formats: bool = False,
-                    budget_s_per_op: float = 10.0) -> SearchResult:
+                    budget_s_per_op: float = 10.0,
+                    budget_pairs_per_op: Optional[int] = None,
+                    use_batch: bool = True,
+                    pair_log: Optional[list] = None) -> SearchResult:
     """Sparseloop-style stepwise DSE (see module docstring).
 
     Structural costs faithfully reproduced: (1) the dense-first pass cannot
@@ -69,7 +97,20 @@ def stepwise_search(workload: Workload, arch: HardwareConfig,
     (nothing tells it which tilings only matter compressed); (2) every
     dense-legal mapping is RE-MODELED under the sparse configuration
     (stepwise modeling — no incremental reuse); (3) sparse-illegal
-    candidates are discovered only at the final legality check."""
+    candidates are discovered only at the final legality check.
+
+    ``budget_pairs_per_op`` (count-based, deterministic) takes precedence
+    over the wall-clock ``budget_s_per_op`` when set; both only apply in
+    Search mode.  Under the count budget the batch path replays the seed
+    loop's cutoff pair-for-pair (same pairs visited, same designs, same
+    ``evaluations``); under the wall-clock budget the scalar loop checks
+    the clock after every pair while the batch path can only check between
+    chunks, so the two paths may visit different pair counts — use the
+    count budget wherever reproducibility matters (benchmarks and tests
+    do).  ``pair_log``, if given, collects ``(op name, i, j)`` per visited
+    Search-mode pair (the equivalence tests pin identical visit order
+    across paths).  ``use_batch=False`` keeps the seed per-pair loop as
+    the benchmark reference."""
     t0 = time.perf_counter()
     evals = 0
     ops_out: list[OpDesign] = []
@@ -96,73 +137,300 @@ def stepwise_search(workload: Workload, arch: HardwareConfig,
         shortlist = [m for _, m in scored]
 
         # -- step 2: sparse feature modeling + legality corrections ---------
+        # the side populations and the shuffled pair order are shared by
+        # both paths (pure enumeration — the per-pair work is what differs)
         if search_formats:
-            format_pairs = _exhaustive_format_pairs(op, spec_i, spec_w)
+            lhs, lhs_plans = _format_side(spec_i)
+            rhs, rhs_plans = _format_side(spec_w)
         else:
-            format_pairs = [(
-                _fmt_or_none(fixed_formats[0], op.i_dims()) if op.sp_i.density < 1 else None,
-                _fmt_or_none(fixed_formats[1], op.w_dims()) if op.sp_w.density < 1 else None,
-            )]
+            lhs = [_fmt_or_none(fixed_formats[0], op.i_dims())
+                   if op.sp_i.density < 1 else None]
+            rhs = [_fmt_or_none(fixed_formats[1], op.w_dims())
+                   if op.sp_w.density < 1 else None]
+            lhs_plans, rhs_plans = [None], [None]
+        order = _pair_order(len(lhs), len(rhs))
 
-        best: Optional[OpDesign] = None
-        best_metric = math.inf
-        for fmt_i, fmt_w in format_pairs:
-            cf_i = compile_format(fmt_i, spec_i) if fmt_i else d_i
-            cf_w = compile_format(fmt_w, spec_w) if fmt_w else d_w
-            cf_o = None
-            if fmt_i is not None and fmt_i.name:
-                cf_o = output_cf(_fixed_candidate(fmt_i.name, spec_i), op)
-            ratio_i = min(cf_i.ratio, 1.0) if fmt_i else 1.0
-            ratio_w = min(cf_w.ratio, 1.0) if fmt_w else 1.0
-            # post-hoc legality: metadata may not fit where dense did —
-            # every rejected candidate is a wasted correction-loop model call
-            legal = [m for m in shortlist
-                     if tile_fits(op, m.tile, arch, ratio_i, ratio_w)]
-            evals += len(shortlist)
-            if legal:
-                bc = evaluate_batch(op, arch, legal, [(cf_i, cf_w)], cf_o)
-                metrics = bc.metric(cfg.objective)
-                j = int(np.argmin(metrics))
-                if metrics[j] < best_metric:
-                    best_metric = float(metrics[j])
-                    best = OpDesign(op, legal[j], cf_i.fmt, cf_w.fmt,
-                                    bc.report(j))
-            if search_formats and time.perf_counter() - op_t0 > budget_s_per_op:
-                break
-        assert best is not None, f"stepwise search found no design for {op.name}"
+        if use_batch:
+            best, e = _sweep_batched(
+                op, arch, cfg, shortlist, spec_i, spec_w, d_i, d_w,
+                lhs, lhs_plans, rhs, rhs_plans, order, search_formats,
+                budget_s_per_op, budget_pairs_per_op, op_t0, pair_log)
+        else:
+            best, e = _sweep_scalar(
+                op, arch, cfg, shortlist, spec_i, spec_w, d_i, d_w,
+                lhs, rhs, order, search_formats,
+                budget_s_per_op, budget_pairs_per_op, op_t0, pair_log)
+        evals += e
+        if best is None:
+            raise SearchError(
+                f"stepwise search found no design for {op.name!r} "
+                f"({len(shortlist)} dense-legal mappings, "
+                f"{len(order)} format pairs)",
+                op=op.name,
+                pair=None if search_formats else tuple(fixed_formats or ()))
         ops_out.append(best)
 
     dp = DesignPoint(ops_out, None, None)
     return SearchResult(dp, evals, time.perf_counter() - t0, SearchStats())
 
 
-def _exhaustive_format_pairs(op: MatMul, spec_i: TensorSpec, spec_w: TensorSpec,
-                             max_levels: int = 3, alloc_cap: int = 24,
-                             side_cap: int = 600):
-    """Unpruned format × allocation sweep (what a format-naive stepwise
-    framework would have to do).  Generates I-side × W-side combinations
-    lazily in a shuffled order so budget cuts don't bias toward level-1
-    formats; sides are capped to keep the cross product enumerable."""
-    def side(spec: TensorSpec) -> list[Optional[Format]]:
-        if spec.sparsity.density >= 1.0:
-            return [None]
-        fmts: list[Optional[Format]] = [None]
-        for pat in enumerate_patterns(list(spec.dims), max_levels=max_levels):
-            for fmt in allocate(pat, spec.dims, max_allocs=alloc_cap):
-                fmts.append(fmt)
-                if len(fmts) > side_cap * 4:
-                    break
-        rng = random.Random(1)
-        if len(fmts) > side_cap:
-            fmts = [None] + rng.sample(fmts[1:], side_cap - 1)
-        return fmts
+def _format_side(spec: TensorSpec, max_levels: int = 3, alloc_cap: int = 24,
+                 side_cap: int = 600
+                 ) -> tuple[list[Optional[Format]], list[Optional[AllocPlan]]]:
+    """One side of the unpruned format × allocation sweep (what a
+    format-naive stepwise framework would have to do): every pattern ×
+    allocation up to the caps, thinned to ``side_cap`` by seeded sampling
+    so budget cuts don't bias toward level-1 formats.
 
-    lhs, rhs = side(spec_i), side(spec_w)
-    rng = random.Random(0)
-    order = [(i, j) for i in range(len(lhs)) for j in range(len(rhs))]
-    rng.shuffle(order)
-    for i, j in order:
-        yield lhs[i], rhs[j]
+    Enumerates :class:`~repro.core.formats.AllocPlan` rows and only builds
+    :class:`Format` objects for the sampled survivors; the RNG stream (and
+    hence the sampled population) is identical to the seed's Format-level
+    enumeration, since sampling consumes randomness by population LENGTH
+    only.  Returns (formats, plans) aligned, index 0 = dense ``None``."""
+    if spec.sparsity.density >= 1.0:
+        return [None], [None]
+    plans: list[Optional[AllocPlan]] = [None]
+    for pat in enumerate_patterns(list(spec.dims), max_levels=max_levels):
+        for plan in allocation_plans(pat, spec.dims, max_allocs=alloc_cap):
+            plans.append(plan)
+            if len(plans) > side_cap * 4:
+                break
+    rng = random.Random(1)
+    if len(plans) > side_cap:
+        plans = [None] + rng.sample(plans[1:], side_cap - 1)
+    return [None] + [p.build() for p in plans[1:]], plans
+
+
+def _pair_order(n_lhs: int, n_rhs: int) -> np.ndarray:
+    """The sweep's shuffled visit order over the (i, j) cross product, as a
+    flat-index permutation (entry k decodes as ``divmod(k, n_rhs)``).
+
+    Seeded and deterministic, so budget cuts hit a stable, unbiased prefix
+    of the cross product; generated with numpy's PCG64 permutation rather
+    than the seed's Python Fisher–Yates — the full 600×600 product shuffles
+    in milliseconds instead of dominating both sweep paths' wall-clock.
+    Both paths share the order, so batch-vs-scalar equivalence holds
+    pair-for-pair."""
+    rng = np.random.Generator(np.random.PCG64(0))
+    return rng.permutation(n_lhs * n_rhs)
+
+
+def _sweep_scalar(op: MatMul, arch: HardwareConfig, cfg: CoSearchConfig,
+                  shortlist: list[Mapping], spec_i: TensorSpec,
+                  spec_w: TensorSpec, d_i: CompiledFormat, d_w: CompiledFormat,
+                  lhs: list[Optional[Format]], rhs: list[Optional[Format]],
+                  order: np.ndarray, search_formats: bool,
+                  budget_s_per_op: float, budget_pairs_per_op: Optional[int],
+                  op_t0: float, pair_log: Optional[list]
+                  ) -> tuple[Optional[OpDesign], int]:
+    """The seed per-pair loop (benchmark reference): one compile + one
+    Python legality scan + one evaluator call per visited pair."""
+    best: Optional[OpDesign] = None
+    best_metric = math.inf
+    evals = 0
+    visited = 0
+    n_rhs = len(rhs)
+    for flat in order.tolist():
+        i, j = divmod(flat, n_rhs)
+        fmt_i, fmt_w = lhs[i], rhs[j]
+        cf_i = compile_format(fmt_i, spec_i) if fmt_i else d_i
+        cf_w = compile_format(fmt_w, spec_w) if fmt_w else d_w
+        cf_o = None
+        if fmt_i is not None and fmt_i.name:
+            cf_o = output_cf(_fixed_candidate(fmt_i.name, spec_i), op)
+        ratio_i = min(cf_i.ratio, 1.0) if fmt_i else 1.0
+        ratio_w = min(cf_w.ratio, 1.0) if fmt_w else 1.0
+        # post-hoc legality: metadata may not fit where dense did —
+        # every rejected candidate is a wasted correction-loop model call
+        legal = [m for m in shortlist
+                 if tile_fits(op, m.tile, arch, ratio_i, ratio_w)]
+        evals += len(shortlist)
+        if legal:
+            bc = evaluate_batch(op, arch, legal, [(cf_i, cf_w)], cf_o)
+            metrics = bc.metric(cfg.objective)
+            k = int(np.argmin(metrics))
+            if metrics[k] < best_metric:
+                best_metric = float(metrics[k])
+                best = OpDesign(op, legal[k], cf_i.fmt, cf_w.fmt,
+                                bc.report(k))
+        visited += 1
+        if search_formats and pair_log is not None:
+            pair_log.append((op.name, i, j))
+        if search_formats:
+            if budget_pairs_per_op is not None:
+                if visited >= budget_pairs_per_op:
+                    break
+            elif time.perf_counter() - op_t0 > budget_s_per_op:
+                break
+    return best, evals
+
+
+def _compile_side(fmts: Sequence[Optional[Format]],
+                  plans: Sequence[Optional[AllocPlan]], spec: TensorSpec,
+                  dense: CompiledFormat, used: np.ndarray
+                  ) -> tuple[list[Optional[CompiledFormat]], np.ndarray]:
+    """Compile one side's format population in one pass: plans group by
+    pattern and score through :func:`~repro.core.sparsity.analyze_plans`
+    (one vectorized walk per pattern family), each member compiling from
+    its precomputed report — no per-pair ``compile_format``/``analyze``
+    round trips.  Only indices in ``used`` (those reachable within the
+    budgeted pair prefix) are compiled; the rest stay ``None`` with a
+    placeholder ratio of 1.0, and are never gathered.  Returns (compiled
+    formats, legality ratio vector)."""
+    used_set = set(used.tolist())
+    cfs: list[Optional[CompiledFormat]] = [None] * len(fmts)
+    groups: dict[tuple, list[int]] = {}
+    for idx in used_set:
+        fmt, plan = fmts[idx], plans[idx]
+        if fmt is None:
+            cfs[idx] = dense
+        elif plan is None:          # named standard format (Fixed mode)
+            cfs[idx] = compile_format(fmt, spec)
+        else:
+            groups.setdefault(plan.pattern, []).append(idx)
+    for idxs in groups.values():
+        idxs.sort()
+        br = analyze_plans([plans[i] for i in idxs], spec)
+        for row, idx in enumerate(idxs):
+            cfs[idx] = compile_format_from_report(fmts[idx], spec,
+                                                  br.report(row))
+    ratios = np.array([1.0 if (cf is None or fmt is None)
+                       else min(cf.ratio, 1.0)
+                       for fmt, cf in zip(fmts, cfs)])
+    return cfs, ratios
+
+
+def _sweep_batched(op: MatMul, arch: HardwareConfig, cfg: CoSearchConfig,
+                   shortlist: list[Mapping], spec_i: TensorSpec,
+                   spec_w: TensorSpec, d_i: CompiledFormat,
+                   d_w: CompiledFormat, lhs: list[Optional[Format]],
+                   lhs_plans: list[Optional[AllocPlan]],
+                   rhs: list[Optional[Format]],
+                   rhs_plans: list[Optional[AllocPlan]],
+                   order: np.ndarray, search_formats: bool,
+                   budget_s_per_op: float, budget_pairs_per_op: Optional[int],
+                   op_t0: float, pair_log: Optional[list]
+                   ) -> tuple[Optional[OpDesign], int]:
+    """Vectorized sweep: per chunk of visited pairs, ONE ratio-vector
+    legality matrix (:func:`~repro.core.dataflow.tile_fits_batch`) and ONE
+    :func:`~repro.core.costmodel.evaluate_batch_gather` call over the legal
+    (mapping, pair) rows — the shortlist packs once per op and rows gather
+    by numpy indexing, so the per-pair Python of the seed loop disappears;
+    the per-pair argmin + strict-less best update and the budget cutoff
+    replay the scalar loop in visit order, so designs, pair logs and
+    ``evaluations`` are bit-identical under the count-based budget."""
+    n_short = len(shortlist)
+    table = pack_mappings(shortlist)
+    n_pairs = len(order)
+    if search_formats and budget_pairs_per_op is not None:
+        n_pairs = min(n_pairs, budget_pairs_per_op)
+    n_rhs = len(rhs)
+    # output writeback format per I-side entry (named formats only — the
+    # sweep's unnamed allocations write back dense, as in the seed loop)
+    cf_os = [output_cf(_fixed_candidate(f.name, spec_i), op)
+             if (f is not None and f.name) else None for f in lhs]
+
+    # Only formats reachable within the pair-visit horizon compile and
+    # enter the fetch tables: the count budget fixes the horizon exactly;
+    # under the wall-clock budget the horizon starts small and DOUBLES as
+    # the clock allows, so a tight budget never pays full-population setup
+    # for pairs it will never visit (recompiles on extension hit the memo
+    # compile cache).
+    lhs_cfs: list = []
+    rhs_cfs: list = []
+    lhs_ratio = rhs_ratio = None
+    ft_i = ft_w = None
+    pos_i = np.zeros(len(lhs), np.int64)
+    pos_w = np.zeros(len(rhs), np.int64)
+
+    def build_to(h: int) -> None:
+        nonlocal lhs_cfs, lhs_ratio, rhs_cfs, rhs_ratio, ft_i, ft_w
+        used_i = np.unique(order[:h] // n_rhs)
+        used_w = np.unique(order[:h] % n_rhs)
+        lhs_cfs, lhs_ratio = _compile_side(lhs, lhs_plans, spec_i, d_i,
+                                           used_i)
+        rhs_cfs, rhs_ratio = _compile_side(rhs, rhs_plans, spec_w, d_w,
+                                           used_w)
+        # per-(format, tile) fetch terms for the reachable populations,
+        # one broadcast pass each — the chunk loop below only gathers;
+        # pos_* maps a side index to its table row
+        ft_i = format_fetch_table([lhs_cfs[k] for k in used_i.tolist()],
+                                  table)
+        ft_w = format_fetch_table([rhs_cfs[k] for k in used_w.tolist()],
+                                  table)
+        pos_i[used_i] = np.arange(len(used_i))
+        pos_w[used_w] = np.arange(len(used_w))
+
+    wall_clock = search_formats and budget_pairs_per_op is None
+    horizon = min(n_pairs, 4 * _PAIR_CHUNK) if wall_clock else n_pairs
+    build_to(horizon)
+    # one mapping-only ctx per distinct cf_o (Search mode: just None),
+    # shared by every chunk instead of rebuilt per evaluator call
+    ctx_by_cfo: dict[int, object] = {}
+    best: Optional[OpDesign] = None
+    best_metric = math.inf
+    evals = 0
+    pos = 0
+    while pos < n_pairs:
+        if pos >= horizon:              # clock still running: extend
+            horizon = min(n_pairs, horizon * 2)
+            build_to(horizon)
+        chunk = order[pos:min(pos + _PAIR_CHUNK, n_pairs, horizon)]
+        ii = chunk // n_rhs
+        jj = chunk % n_rhs
+        ii_l, jj_l = ii.tolist(), jj.tolist()
+        legal = tile_fits_batch(op, table.tiles, arch,
+                                lhs_ratio[ii], rhs_ratio[jj])
+        evals += len(chunk) * n_short
+        # one evaluator call per run of equal cf_o (Search mode: one run —
+        # cf_o is None for every unnamed side format)
+        runs: list[tuple[Optional[CompiledFormat], int, int]] = []
+        for c, i in enumerate(ii_l):
+            if not runs or runs[-1][0] is not cf_os[i]:
+                runs.append((cf_os[i], c, c + 1))
+            else:
+                runs[-1] = (runs[-1][0], runs[-1][1], c + 1)
+        pair_best: list[Optional[tuple]] = [None] * len(chunk)
+        for cf_o, c0, c1 in runs:
+            # row r of the gather = (pair c0+pair_rows[r], map_idx[r]);
+            # np.nonzero walks row-major, i.e. pairs in visit order with
+            # each pair's legal mappings in shortlist order — exactly the
+            # scalar loop's scan
+            pair_rows, map_idx = np.nonzero(legal[c0:c1])
+            if len(map_idx) == 0:
+                continue
+            ctx = ctx_by_cfo.get(id(cf_o))
+            if ctx is None:
+                ctx = ctx_by_cfo[id(cf_o)] = mapping_ctx(op, arch, table,
+                                                         cf_o)
+            bc = evaluate_batch_gather(op, arch, table,
+                                       ft_i, pos_i[ii[c0 + pair_rows]],
+                                       ft_w, pos_w[jj[c0 + pair_rows]],
+                                       map_idx, cf_o, ctx=ctx)
+            metrics = bc.metric(cfg.objective)
+            counts = np.bincount(pair_rows, minlength=c1 - c0)
+            offs = np.concatenate(([0], np.cumsum(counts)))
+            for c in range(c0, c1):
+                lo, hi = int(offs[c - c0]), int(offs[c - c0 + 1])
+                if hi > lo:
+                    k = lo + int(np.argmin(metrics[lo:hi]))
+                    pair_best[c] = (float(metrics[k]), bc, k,
+                                    shortlist[int(map_idx[k])])
+        # strict-less replay of the scalar loop's best update, visit order
+        for c, (i, j) in enumerate(zip(ii_l, jj_l)):
+            if search_formats and pair_log is not None:
+                pair_log.append((op.name, i, j))
+            pb = pair_best[c]
+            if pb is not None and pb[0] < best_metric:
+                metric, bc, k, mapping = pb
+                best_metric = metric
+                best = OpDesign(op, mapping, lhs_cfs[i].fmt, rhs_cfs[j].fmt,
+                                bc.report(k))
+        pos += len(chunk)
+        if search_formats and budget_pairs_per_op is None and \
+                time.perf_counter() - op_t0 > budget_s_per_op:
+            break
+    return best, evals
 
 
 # ---------------------------------------------------------------------------

@@ -28,8 +28,8 @@ call.  Whole `_search_op` results are memoized by (op shape+sparsity+count,
 arch, candidate pair, config) so identical layers are searched once across
 pairs and models; see :mod:`repro.core.memo` for the cache registry and key
 conventions.  :func:`cosearch_multi` flattens (pair, model) items into a
-work-list that can shard across threads (``workers=``) with a
-deterministic merge.
+work-list that can shard across threads or processes (``workers=``,
+``executor=``) with a deterministic merge.
 """
 
 from __future__ import annotations
@@ -45,11 +45,11 @@ from repro.core import memo
 from repro.core.arch import HardwareConfig
 from repro.core.costmodel import (CompiledFormat, CostReport, compile_format,
                                   dense_format, evaluate, evaluate_batch,
-                                  format_key, memory_energy, spec_key)
+                                  format_key, memory_energy)
 from repro.core.dataflow import Mapping, mappings_for
 from repro.core.engine import (Candidate, EngineConfig, SearchStats,
                                allocate_for_mapping, allocate_for_mappings,
-                               generate_candidates)
+                               generate_candidates, reference_allocation)
 from repro.core.formats import Format, Level, standard_formats
 from repro.core.primitives import Prim
 from repro.core.sparsity import TensorSpec
@@ -189,39 +189,24 @@ def _op_format(cand: Optional[Candidate], pattern_dims: dict[str, int],
     return compile_format(fmt, spec)
 
 
-_REFERENCE_CF_CACHE: dict = memo.register({}, "reference_cf")
-
-
 def _reference_cf(cand: Optional[Candidate], spec: TensorSpec
                   ) -> Optional[CompiledFormat]:
     """Best SIZE-optimal allocation of the candidate's pattern on this op's
     dims (the engine's reference view, independent of the mapping).
 
-    Memoized by (pattern — named format or bare levels, spec): the result
-    only depends on the candidate's compression PATTERN, not its reference
-    allocation sizes, so equal patterns across models share one compile."""
+    The allocation scan lives in :func:`repro.core.engine.
+    reference_allocation`, whose cache :func:`~repro.core.engine.
+    generate_candidates` seeds as a by-product of candidate generation — on
+    the representative spec the reference is a dict hit, not a second scan;
+    only ops whose dims/sparsity differ fall through to one vectorized
+    pass.  The compile itself is memoized by (format, spec)."""
     if cand is None:
         return None
     if cand.fmt.name in ("Bitmap", "RLE", "CSR", "CSC", "COO"):
         return compile_format(standard_formats(spec.dims)[cand.fmt.name], spec)
     bare, _ = _bare_and_leaf(cand)
-    sk = spec_key(spec)
-    return memo.get_or(_REFERENCE_CF_CACHE,
-                       None if sk is None else (bare, sk),
-                       lambda: _reference_cf_impl(bare, spec))
-
-
-def _reference_cf_impl(bare: tuple[Level, ...], spec: TensorSpec
-                       ) -> Optional[CompiledFormat]:
-    from repro.core.formats import allocate
-    from repro.core.sparsity import analyze_batch
-    fmts = list(allocate(bare, spec.dims, max_allocs=24))
-    if not fmts:
-        return None
-    # one vectorized pass; argmin's first-occurrence ties match the scalar
-    # strict-less scan this replaced
-    j = int(np.argmin(analyze_batch(fmts, spec, validate=False).total_bits))
-    return compile_format(fmts[j], spec)
+    fmt = reference_allocation(bare, spec)
+    return compile_format(fmt, spec) if fmt is not None else None
 
 
 def output_cf(cand_i: Optional[Candidate], op: MatMul
@@ -474,10 +459,40 @@ def cosearch(workload: Workload, arch: HardwareConfig,
 # Multi-model co-search with importance scoring (§III-C3)
 # ---------------------------------------------------------------------------
 
+def _multi_init_worker(state: dict) -> None:
+    """Process-pool initializer: warm the child's memo caches from the
+    parent's :func:`repro.core.memo.export_state` snapshot, so each worker
+    starts with the candidate/compile/mapping state phase 1 already paid
+    for instead of recomputing it per process."""
+    memo.import_state(state)
+
+
+def _multi_work_item(item: tuple
+                     ) -> tuple[list[OpDesign], int, float, Optional[str]]:
+    """One (pattern pair, model) unit of the co-search work-list.
+
+    Top-level and fed a picklable tuple — (pair key, candidate pair,
+    workload, arch, config) are all frozen value types — so the same
+    function runs on the serial path, thread pool, and process pool."""
+    key, pair, wl, arch, cfg = item
+    ci, cw = pair
+    t0 = time.perf_counter()
+    evals = 0
+    ops: list[OpDesign] = []
+    for op in wl.ops:
+        od, e = _search_op(op, arch, ci, cw, cfg)
+        evals += e
+        if od is None:
+            return ops, evals, time.perf_counter() - t0, op.name
+        ops.append(od)
+    return ops, evals, time.perf_counter() - t0, None
+
+
 def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
                    importance: dict[str, float],
                    cfg: CoSearchConfig = CoSearchConfig(),
                    workers: Optional[int] = None,
+                   executor: str = "thread",
                    ) -> tuple[dict[str, SearchResult], tuple, float]:
     """Pick ONE shared format pair across models minimizing the importance-
     weighted objective.  Returns (per-model results under the winning pair,
@@ -487,11 +502,19 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
     memoized and cheap — with per-model ``SearchStats`` snapshots, so each
     model's result reports ITS OWN pattern/allocation counters rather than
     aliasing one shared object); (2) a flat (pair, model) work-list whose
-    items share the ``_search_op`` cache and are independent — ``workers``
-    opts into a ``concurrent.futures`` thread pool (threads, not processes:
-    the items spend their time in vectorized NumPy which releases the GIL,
-    and share the memo caches); (3) a deterministic merge in work-list
-    order, so results are identical for any worker count."""
+    items are independent — ``workers`` opts into a ``concurrent.futures``
+    pool; (3) a deterministic merge in work-list order, so results are
+    identical for any worker count and either executor.
+
+    ``executor`` picks the phase-2 pool: ``"thread"`` shares the
+    ``_search_op`` cache in-process (the items spend much of their time in
+    vectorized NumPy, which releases the GIL, but the remaining Python
+    share serializes); ``"process"`` shards past the GIL — work items are
+    picklable value tuples, and each worker warms its own memo registry
+    from a :func:`repro.core.memo.export_state` snapshot of phase 1's
+    caches, so per-process state pays off immediately.  Item results
+    (designs + eval counts) are pure functions of the item, so the merged
+    output is identical across executors and worker counts."""
     # -- phase 1: candidate generation, union of pattern pairs over models --
     per_model_stats: dict[str, SearchStats] = {}
     pair_keys: dict[tuple, tuple[Optional[Candidate], Optional[Candidate]]] = {}
@@ -511,30 +534,25 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
                    key=lambda kv: _pair_rank(kv[1], sentinel))[: cfg.max_pairs]
 
     # -- phase 2: flat (pair, model) work-list ------------------------------
+    if executor not in ("thread", "process"):
+        raise ValueError(f"executor must be 'thread' or 'process', "
+                         f"got {executor!r}")
     work = [(key, pair, wl) for key, pair in items for wl in workloads]
+    payload = [(key, pair, wl, arch, cfg) for key, pair, wl in work]
 
-    def run_item(key: tuple,
-                 pair: tuple[Optional[Candidate], Optional[Candidate]],
-                 wl: Workload
-                 ) -> tuple[list[OpDesign], int, float, Optional[str]]:
-        ci, cw = pair
-        t0 = time.perf_counter()
-        evals = 0
-        ops: list[OpDesign] = []
-        for op in wl.ops:
-            od, e = _search_op(op, arch, ci, cw, cfg)
-            evals += e
-            if od is None:
-                return ops, evals, time.perf_counter() - t0, op.name
-            ops.append(od)
-        return ops, evals, time.perf_counter() - t0, None
-
-    if workers is not None and workers > 1:
+    if workers is not None and workers > 1 and executor == "process":
+        from concurrent.futures import ProcessPoolExecutor
+        state = memo.export_state()
+        with ProcessPoolExecutor(max_workers=workers,
+                                 initializer=_multi_init_worker,
+                                 initargs=(state,)) as ex:
+            results = list(ex.map(_multi_work_item, payload))
+    elif workers is not None and workers > 1:
         from concurrent.futures import ThreadPoolExecutor
         with ThreadPoolExecutor(max_workers=workers) as ex:
-            results = list(ex.map(lambda a: run_item(*a), work))
+            results = list(ex.map(_multi_work_item, payload))
     else:
-        results = [run_item(*a) for a in work]
+        results = [_multi_work_item(item) for item in payload]
 
     # -- phase 3: deterministic merge in work-list order --------------------
     table: dict[str, dict[tuple, float]] = {wl.name: {} for wl in workloads}

@@ -46,7 +46,8 @@ from repro.core.arch import HardwareConfig
 from repro.core.dataflow import DIMS, ORDERS, Mapping, irrelevant_refetch
 from repro.core.formats import Format
 from repro.core.primitives import DECODE_COST, Prim
-from repro.core.sparsity import SizeReport, TensorSpec, analyze, gather_scalar
+from repro.core.sparsity import (SizeReport, TensorSpec, analyze,
+                                 gather_scalar, spec_key)
 from repro.core.workload import MatMul
 
 
@@ -103,23 +104,6 @@ class CompiledFormat:
                    for l in self.levels)
 
 
-def _sparsity_or_none(sp) -> Optional[object]:
-    try:
-        hash(sp)
-    except TypeError:
-        return None
-    return sp
-
-
-def spec_key(spec: TensorSpec) -> Optional[tuple]:
-    """Hashable cache key for a TensorSpec (None if the sparsity model is
-    unhashable — callers then skip their cache)."""
-    sp = _sparsity_or_none(spec.sparsity)
-    if sp is None:
-        return None
-    return (tuple(spec.dims.items()), sp, spec.value_bits)
-
-
 def format_key(fmt: Optional[Format]) -> tuple:
     """Value-based hashable identity of a (possibly sized) format."""
     if fmt is None:
@@ -137,11 +121,29 @@ def compile_format(fmt: Optional[Format], spec: TensorSpec) -> CompiledFormat:
                        lambda: _compile_format_impl(fmt, spec))
 
 
+def compile_format_from_report(fmt: Format, spec: TensorSpec,
+                               report: SizeReport) -> CompiledFormat:
+    """:func:`compile_format` fed a precomputed :class:`SizeReport` — the
+    entry point for batch analyzers (``analyze_batch`` /
+    ``analyze_plans``), which score whole format families in one pass and
+    then compile each member without re-running the scalar ``analyze``.
+    Shares the compile cache with :func:`compile_format`, so either entry
+    point can satisfy the other's lookups."""
+    sk = spec_key(spec)
+    key = None if sk is None else (format_key(fmt), sk)
+    return memo.get_or(_COMPILE_CACHE, key,
+                       lambda: _compiled_with_report(fmt, spec, report))
+
+
 def _compile_format_impl(fmt: Optional[Format], spec: TensorSpec
                          ) -> CompiledFormat:
     if fmt is None:
         return CompiledFormat(None, spec.dense_bits, spec.dense_bits, (), {})
-    report: SizeReport = analyze(fmt, spec)
+    return _compiled_with_report(fmt, spec, analyze(fmt, spec))
+
+
+def _compiled_with_report(fmt: Format, spec: TensorSpec, report: SizeReport
+                          ) -> CompiledFormat:
     infos: list[_LevelInfo] = []
     below: dict[str, int] = dict.fromkeys(spec.dims, 1)
     # block_below per level = product of sizes of INNER levels on the same dim
@@ -243,15 +245,20 @@ def _build_row(cf: CompiledFormat) -> _FormatRow:
     for d, g in cf.payload_granule.items():
         if g > 1:
             gran[_DIM_COL[d]] = float(g)
+    # Zero-contribution levels (dense ``None`` heads/leaves: no metadata, no
+    # decode work) drop out of the packed row — their align factors only
+    # ever multiply 0.0, so the fetch/decode sums are exact without them
+    # and every align matrix shrinks to the compressed levels only.
+    lvls = [l for l in cf.levels if l.meta_bits != 0.0 or l.decode_ops != 0.0]
     return _FormatRow(
         dense=cf.fmt is None,
         dense_bits=cf.dense_bits,
         payload_bits=cf.payload_bits,
         ratio=cf.ratio,
-        lvl_col=np.array([_DIM_COL[l.dim] for l in cf.levels], np.int64),
-        lvl_block=np.array([float(l.block_below) for l in cf.levels]),
-        lvl_meta=np.array([l.meta_bits for l in cf.levels]),
-        lvl_decode=np.array([l.decode_ops for l in cf.levels]),
+        lvl_col=np.array([_DIM_COL[l.dim] for l in lvls], np.int64),
+        lvl_block=np.array([float(l.block_below) for l in lvls]),
+        lvl_meta=np.array([l.meta_bits for l in lvls]),
+        lvl_decode=np.array([l.decode_ops for l in lvls]),
         gran=gran,
     )
 
@@ -295,6 +302,30 @@ def _pack(cfs: Sequence[CompiledFormat]) -> _FormatSoA:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class MappingSoA:
+    """A mapping set packed once into structure-of-arrays form, so sweeps
+    that score many (mapping subset, format pair) combinations of the same
+    set (the stepwise baseline) pay the per-mapping Python exactly once."""
+
+    tiles: np.ndarray            # (n, 3) int64 over DIMS
+    sps: np.ndarray              # (n, 3) int64
+    ords: np.ndarray             # (n,) int64 — index into ORDERS
+
+    def __len__(self) -> int:
+        return len(self.ords)
+
+
+def pack_mappings(mappings: Sequence[Mapping]) -> MappingSoA:
+    n = len(mappings)
+    tiles = np.array([[m.tile[d] for d in DIMS] for m in mappings],
+                     np.int64).reshape(n, len(DIMS))
+    sps = np.array([[m.spatial[d] for d in DIMS] for m in mappings],
+                   np.int64).reshape(n, len(DIMS))
+    ords = np.array([_ORDER_IDX[m.order] for m in mappings], np.int64)
+    return MappingSoA(tiles, sps, ords)
+
+
 def _align_vec(b: np.ndarray, t: np.ndarray) -> np.ndarray:
     """Vectorized CompiledFormat._align: b/t when b>t, else ceil(t/b)/(t/b)."""
     whole = t / b
@@ -314,11 +345,6 @@ def _fetched_bits_vec(soa: _FormatSoA, tiles: np.ndarray) -> np.ndarray:
     meta = (soa.lvl_meta * a).sum(axis=1)
     pay = soa.payload_bits * _align_vec(soa.gran, tiles).prod(axis=1)
     return np.where(soa.dense, soa.dense_bits, pay + meta)
-
-
-def _decode_ops_vec(soa: _FormatSoA, tiles: np.ndarray) -> np.ndarray:
-    a = _align_vec(soa.lvl_block, _tiles_at_levels(soa, tiles))
-    return np.where(soa.dense, 0.0, (soa.lvl_decode * a).sum(axis=1))
 
 
 def _prob_nonempty_vec(sp, vals: np.ndarray) -> np.ndarray:
@@ -373,6 +399,13 @@ class BatchCost:
         )
 
 
+def _empty_batch() -> BatchCost:
+    z = np.zeros(0)
+    return BatchCost(energy=z, cycles=z, edp=z, utilization=z,
+                     dram_bits=z, e_dram=z, e_glb=z, e_decode=z,
+                     dram_cycles=z, compute_cycles=z, e_rf=0.0, e_mac=0.0)
+
+
 def evaluate_batch(op: MatMul, arch: HardwareConfig,
                    mappings: Sequence[Mapping],
                    cf_pairs: Sequence[tuple[CompiledFormat, CompiledFormat]],
@@ -388,10 +421,105 @@ def evaluate_batch(op: MatMul, arch: HardwareConfig,
     if len(cf_pairs) not in (1, n):
         raise ValueError(f"cf_pairs length {len(cf_pairs)} != 1 or {n}")
     if n == 0:
-        z = np.zeros(0)
-        return BatchCost(energy=z, cycles=z, edp=z, utilization=z,
-                         dram_bits=z, e_dram=z, e_glb=z, e_decode=z,
-                         dram_cycles=z, compute_cycles=z, e_rf=0.0, e_mac=0.0)
+        return _empty_batch()
+    soa_i = _pack([p[0] for p in cf_pairs])
+    soa_w = _pack([p[1] for p in cf_pairs])
+    ctx = mapping_ctx(op, arch, pack_mappings(mappings), cf_o)
+    return _evaluate_core(op, arch, ctx, slice(None), soa_i, soa_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatTable:
+    """Per-(format, tile) fetch terms of a format population over a packed
+    mapping set, precomputed as (F, S) matrices.
+
+    A sweep scoring many (format pair, mapping) combinations of the same
+    populations (the stepwise baseline: up to 600×600 pairs over one
+    shortlist) gathers rows from these tables instead of re-running the
+    alignment math per candidate row — the only per-candidate work left is
+    the elementwise tail of the cost formulas."""
+
+    fet: np.ndarray              # (F, S) fetched bits per DRAM pass
+    dec: np.ndarray              # (F, S) metadata decode ops
+    ratio: np.ndarray            # (F,) compressed/dense ratio
+
+
+def format_fetch_table(cfs: Sequence[CompiledFormat],
+                       table: MappingSoA) -> FormatTable:
+    """Build the (format population × mapping table) fetch matrices in one
+    broadcast pass — element (f, s) carries exactly what the row-wise
+    evaluator computes for (``cfs[f]``, ``table`` row ``s``): the same
+    align/meta/payload expressions, summed over levels in the same order."""
+    soa = _pack(cfs)
+    tiles_f = table.tiles.astype(float)             # (S, 3)
+    tl = tiles_f[:, soa.lvl_col]                    # (S, F, L)
+    a = _align_vec(soa.lvl_block, tl)               # (S, F, L)
+    meta = (soa.lvl_meta * a).sum(axis=2)           # (S, F)
+    pay = soa.payload_bits * \
+        _align_vec(soa.gran, tiles_f[:, None, :]).prod(axis=2)
+    fet = np.where(soa.dense, soa.dense_bits, pay + meta)
+    dec = np.where(soa.dense, 0.0, (soa.lvl_decode * a).sum(axis=2))
+    return FormatTable(fet=np.ascontiguousarray(fet.T),
+                       dec=np.ascontiguousarray(dec.T),
+                       ratio=soa.ratio)
+
+
+def evaluate_batch_gather(op: MatMul, arch: HardwareConfig,
+                          table: MappingSoA, ft_i: FormatTable,
+                          i_idx: np.ndarray, ft_w: FormatTable,
+                          w_idx: np.ndarray, map_idx: np.ndarray,
+                          cf_o: Optional[CompiledFormat] = None,
+                          ctx: Optional["_MapCtx"] = None) -> BatchCost:
+    """:func:`evaluate_batch` over gathered rows: candidate ``r`` pairs
+    ``table`` row ``map_idx[r]`` with I-side format ``i_idx[r]`` and W-side
+    format ``w_idx[r]`` of the precomputed :func:`format_fetch_table`\\ s.
+
+    The mapping-only half of the formulas computes once per TABLE row
+    (:func:`mapping_ctx` — pass ``ctx`` to reuse one across calls sharing
+    (op, arch, table, cf_o), e.g. every chunk of a sweep), the
+    per-(format, tile) fetch terms come from the tables, and only the
+    elementwise tail runs per candidate — no per-row Python, no per-row
+    alignment math.  Results are bit-identical to :func:`evaluate_batch`
+    on the materialized rows (same expressions, same operation order)."""
+    if len(map_idx) == 0:
+        return _empty_batch()
+    if ctx is None:
+        ctx = mapping_ctx(op, arch, table, cf_o)
+    return _evaluate_terms(
+        op, arch, ctx, map_idx,
+        ft_i.fet[i_idx, map_idx], ft_i.dec[i_idx, map_idx],
+        ft_i.ratio[i_idx],
+        ft_w.fet[w_idx, map_idx], ft_w.dec[w_idx, map_idx],
+        ft_w.ratio[w_idx])
+
+
+@dataclasses.dataclass(frozen=True)
+class _MapCtx:
+    """The mapping-only half of the cost formulas, one row per mapping of a
+    packed set: refetch multipliers, output traffic, conditional-fetch
+    probabilities, GLB stream bases, compute cycles, utilization.  Rows are
+    format-independent, so a sweep re-scoring the same mappings under many
+    format pairs gathers instead of recomputing."""
+
+    tiles_f: np.ndarray          # (S, 3)
+    f_i: np.ndarray              # (S,) refetch multipliers
+    f_w: np.ndarray
+    i_fetch: np.ndarray          # (S,) conditional-fetch probabilities
+    w_fetch: np.ndarray
+    o_bits: np.ndarray           # (S,) output DRAM traffic (cf_o applied)
+    glb_i_base: np.ndarray       # (S,) GLB stream bases (pre-ratio)
+    glb_w_base: np.ndarray
+    glb_o: np.ndarray            # (S,) partial-sum GLB traffic
+    compute_cycles: np.ndarray   # (S,)
+    util: np.ndarray             # (S,) pre-clip utilization
+
+
+def mapping_ctx(op: MatMul, arch: HardwareConfig, msoa: MappingSoA,
+                cf_o: Optional[CompiledFormat] = None) -> _MapCtx:
+    """Precompute the mapping-only formula half for a packed mapping set;
+    the result is reusable across every evaluation sharing
+    (op, arch, mapping set, cf_o)."""
+    n = len(msoa)
     vb = op.value_bits
     rho_i = op.sp_i.density
     rho_w = op.sp_w.density
@@ -399,18 +527,13 @@ def evaluate_batch(op: MatMul, arch: HardwareConfig,
     cyc_frac = arch.reduc.cycle_fraction(rho_i, rho_w)
     macs_dense = float(op.M) * op.N * op.K
 
-    tiles = np.array([[m.tile[d] for d in DIMS] for m in mappings], np.int64)
-    sps = np.array([[m.spatial[d] for d in DIMS] for m in mappings], np.int64)
-    ords = np.array([_ORDER_IDX[m.order] for m in mappings], np.int64)
+    tiles, sps, ords = msoa.tiles, msoa.sps, msoa.ords
     tiles_f = tiles.astype(float)
     sps_f = sps.astype(float)
     ext = np.array([op.M, op.N, op.K], float)
     bounds = np.ceil(ext / tiles_f)
 
-    soa_i = _pack([p[0] for p in cf_pairs])
-    soa_w = _pack([p[1] for p in cf_pairs])
-
-    # --- DRAM traffic (tile-reuse rule + format fetch model) ---------------
+    # --- DRAM refetch (tile-reuse rule) + output traffic -------------------
     f_i = np.where(_REFETCH_OUTER["I"][ords], bounds[:, _IRR_COL["I"]], 1.0)
     f_w = np.where(_REFETCH_OUTER["W"][ords], bounds[:, _IRR_COL["W"]], 1.0)
     f_o = np.where(_REFETCH_OUTER["O"][ords], bounds[:, _IRR_COL["O"]], 1.0)
@@ -434,27 +557,86 @@ def evaluate_batch(op: MatMul, arch: HardwareConfig,
             w_fetch = _prob_nonempty_vec(op.sp_i, tiles[:, _DIM_COL["M"]])
         if arch.reduc.check_w:
             i_fetch = _prob_nonempty_vec(op.sp_w, tiles[:, _DIM_COL["K"]])
-    dram_bits = (_fetched_bits_vec(soa_i, tiles_f) * f_i * i_fetch +
-                 _fetched_bits_vec(soa_w, tiles_f) * f_w * w_fetch +
+
+    # --- GLB stream bases: per-MAC operand streams with spatial + RF reuse
+    # (the operand ratio multiplies in per candidate).  I is shared across
+    # the K-unrolled PEs, W across M-unrolled, O partial sums reduce across
+    # N-unrolled; each fetched word is further reused ~rf_reuse times from
+    # the register file.
+    rr = arch.rf_reuse
+    n_stat = np.maximum(tiles[:, 1] // sps[:, 1], 1)
+    glb_i_base = macs_dense * vb / (sps_f[:, 2] * rr)
+    glb_w_base = macs_dense * vb / (sps_f[:, 0] * rr)
+    glb_o = macs_dense * 2 * vb * mac_frac / (sps_f[:, 1] * rr * n_stat)
+
+    # --- compute latency + utilization -------------------------------------
+    n_tiles = bounds.prod(axis=1)
+    per_tile_cycles = np.ceil(tiles_f / sps_f).prod(axis=1)
+    compute_cycles = n_tiles * per_tile_cycles * cyc_frac
+    util = macs_dense * cyc_frac / (np.maximum(compute_cycles, 1.0)
+                                    * arch.macs)
+    return _MapCtx(tiles_f=tiles_f, f_i=f_i, f_w=f_w,
+                   i_fetch=i_fetch, w_fetch=w_fetch, o_bits=o_bits,
+                   glb_i_base=glb_i_base, glb_w_base=glb_w_base, glb_o=glb_o,
+                   compute_cycles=compute_cycles, util=util)
+
+
+def _evaluate_core(op: MatMul, arch: HardwareConfig, ctx: _MapCtx, idx,
+                   soa_i: _FormatSoA, soa_w: _FormatSoA) -> BatchCost:
+    """Row-wise entry of the cost formulas: compute each candidate's fetch
+    terms from its format SoA row (one align matrix per operand, shared
+    between the fetch and decode terms), then run the shared elementwise
+    tail.  ``idx`` selects the candidates' mapping rows from ``ctx``
+    (``slice(None)`` = identity); ``soa_*`` broadcast one format row across
+    the batch or carry one per candidate."""
+    tiles_f = ctx.tiles_f[idx]
+    a_i = _align_vec(soa_i.lvl_block, _tiles_at_levels(soa_i, tiles_f))
+    a_w = _align_vec(soa_w.lvl_block, _tiles_at_levels(soa_w, tiles_f))
+    fet_i = np.where(soa_i.dense, soa_i.dense_bits,
+                     soa_i.payload_bits
+                     * _align_vec(soa_i.gran, tiles_f).prod(axis=1)
+                     + (soa_i.lvl_meta * a_i).sum(axis=1))
+    fet_w = np.where(soa_w.dense, soa_w.dense_bits,
+                     soa_w.payload_bits
+                     * _align_vec(soa_w.gran, tiles_f).prod(axis=1)
+                     + (soa_w.lvl_meta * a_w).sum(axis=1))
+    dec_i = np.where(soa_i.dense, 0.0, (soa_i.lvl_decode * a_i).sum(axis=1))
+    dec_w = np.where(soa_w.dense, 0.0, (soa_w.lvl_decode * a_w).sum(axis=1))
+    return _evaluate_terms(op, arch, ctx, idx, fet_i, dec_i, soa_i.ratio,
+                           fet_w, dec_w, soa_w.ratio)
+
+
+def _evaluate_terms(op: MatMul, arch: HardwareConfig, ctx: _MapCtx, idx,
+                    fet_i: np.ndarray, dec_i: np.ndarray, ratio_i: np.ndarray,
+                    fet_w: np.ndarray, dec_w: np.ndarray, ratio_w: np.ndarray
+                    ) -> BatchCost:
+    """The elementwise tail of the cost formulas, shared by every entry
+    point: combine per-candidate fetch terms with the gathered mapping-only
+    ctx rows into energy / cycles / EDP."""
+    rho_i = op.sp_i.density
+    rho_w = op.sp_w.density
+    mac_frac = arch.reduc.mac_fraction(rho_i, rho_w)
+    macs_dense = float(op.M) * op.N * op.K
+    vb = op.value_bits
+    f_i, f_w = ctx.f_i[idx], ctx.f_w[idx]
+    o_bits = ctx.o_bits[idx]
+
+    # --- DRAM traffic (tile-reuse rule + format fetch model) ---------------
+    dram_bits = (fet_i * f_i * ctx.i_fetch[idx] +
+                 fet_w * f_w * ctx.w_fetch[idx] +
                  o_bits)
 
-    # --- GLB traffic: per-MAC operand streams with spatial + RF reuse ------
-    # I is shared across the K-unrolled PEs, W across M-unrolled, O partial
-    # sums reduce across N-unrolled; each fetched word is further reused
-    # ~rf_reuse times from the register file.  Compressed operands stream
-    # fewer bits (data stays compressed in GLB — SCNN-style).  Skipping
-    # additionally suppresses the PARTNER operand's reads: a W word whose
-    # paired I is zero is never fetched (and vice versa).
-    rr = arch.rf_reuse
+    # --- GLB traffic: compressed operands stream fewer bits (data stays
+    # compressed in GLB — SCNN-style); skipping suppresses the PARTNER
+    # operand's reads (a W word whose paired I is zero is never fetched,
+    # and vice versa) -------------------------------------------------------
     skip = arch.reduc.kind == "skipping"
     i_partner = rho_w if (skip and arch.reduc.check_w) else 1.0
     w_partner = rho_i if (skip and arch.reduc.check_i) else 1.0
-    n_stat = np.maximum(tiles[:, 1] // sps[:, 1], 1)
-    glb_bits = (macs_dense * vb / (sps_f[:, 2] * rr)
-                * np.minimum(soa_i.ratio, 1.0) * i_partner +
-                macs_dense * vb / (sps_f[:, 0] * rr)
-                * np.minimum(soa_w.ratio, 1.0) * w_partner +
-                macs_dense * 2 * vb * mac_frac / (sps_f[:, 1] * rr * n_stat)
+    glb_bits = (ctx.glb_i_base[idx] * np.minimum(ratio_i, 1.0) * i_partner
+                + ctx.glb_w_base[idx]
+                * np.minimum(ratio_w, 1.0) * w_partner
+                + ctx.glb_o[idx]
                 + o_bits)
 
     # --- RF + MAC ----------------------------------------------------------
@@ -462,8 +644,7 @@ def evaluate_batch(op: MatMul, arch: HardwareConfig,
     mac_energy = macs_dense * mac_frac * arch.mac_pj
 
     # --- metadata decode (charged per DRAM stream) --------------------------
-    decode = (_decode_ops_vec(soa_i, tiles_f) * f_i +
-              _decode_ops_vec(soa_w, tiles_f) * f_w)
+    decode = dec_i * f_i + dec_w * f_w
     decode_energy = decode * arch.decode_pj_per_op
 
     e_dram = dram_bits * arch.dram.pj_per_bit
@@ -472,16 +653,13 @@ def evaluate_batch(op: MatMul, arch: HardwareConfig,
     energy = e_dram + e_glb + e_rf + mac_energy + decode_energy
 
     # --- latency ------------------------------------------------------------
-    n_tiles = bounds.prod(axis=1)
-    per_tile_cycles = np.ceil(tiles_f / sps_f).prod(axis=1)
-    compute_cycles = n_tiles * per_tile_cycles * cyc_frac
+    compute_cycles = ctx.compute_cycles[idx]
     dram_cycles = dram_bits / arch.dram.bw_bits_per_cycle
     glb_cycles = glb_bits / arch.glb.bw_bits_per_cycle
     cycles = np.maximum(np.maximum(compute_cycles, dram_cycles),
                         np.maximum(glb_cycles, 1.0))
 
-    util = macs_dense * cyc_frac / (np.maximum(compute_cycles, 1.0)
-                                    * arch.macs)
+    util = ctx.util[idx]
     cnt = op.count
     energy = energy * cnt
     cycles = cycles * cnt

@@ -25,6 +25,8 @@ import itertools
 import math
 from typing import Iterator, Optional, Sequence
 
+import numpy as np
+
 from repro.core import memo
 from repro.core.arch import HardwareConfig
 from repro.core.workload import MatMul
@@ -153,6 +155,34 @@ def tile_fits(op: MatMul, tile: dict[str, int], arch: HardwareConfig,
         need += bits_i + bits_w                 # ping-pong input buffers
     cap = arch.glb.capacity_bits
     return cap is None or need <= cap
+
+
+def tile_fits_batch(op: MatMul, tiles: np.ndarray, arch: HardwareConfig,
+                    ratio_i: np.ndarray, ratio_w: np.ndarray,
+                    double_buffer: bool = True) -> np.ndarray:
+    """:func:`tile_fits` for many (format-pair, tile) points at once.
+
+    ``tiles`` is an (n, 3) integer array over ``DIMS``; ``ratio_i`` /
+    ``ratio_w`` are length-``p`` compressed/dense ratio vectors (one entry
+    per format pair).  Returns a (p, n) boolean legality matrix.  The
+    arithmetic replays :func:`tile_fits` element-wise in the same operation
+    order (exact-int tile×tile×bits products, then one float multiply per
+    ratio), so a row is bit-identical to ``[tile_fits(op, t, arch, ri, rw)
+    for t in tiles]`` — the stepwise baseline's sweep relies on that to
+    replay the scalar path's legality decisions."""
+    vb = op.value_bits
+    elems_i = (tiles[:, 0] * tiles[:, 1] * vb)[None, :]     # exact int64
+    elems_w = (tiles[:, 1] * tiles[:, 2] * vb)[None, :]
+    bits_o = tiles[:, 0] * tiles[:, 2] * (2 * vb)
+    bits_i = elems_i * np.asarray(ratio_i, float)[:, None]
+    bits_w = elems_w * np.asarray(ratio_w, float)[:, None]
+    need = bits_i + bits_w + bits_o
+    if double_buffer:
+        need = need + (bits_i + bits_w)
+    cap = arch.glb.capacity_bits
+    if cap is None:
+        return np.ones(need.shape, bool)
+    return need <= cap
 
 
 def irrelevant_refetch(order: Sequence[str], operand: str,

@@ -32,7 +32,7 @@ from repro.core.dataflow import Mapping
 from repro.core.formats import Format, Level
 from repro.core.primitives import Prim
 from repro.core.sparsity import (SizeReport, Sparsity, TensorSpec, analyze,
-                                 analyze_batch_rows)
+                                 analyze_plans, spec_key)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +99,43 @@ def _alloc_scan_len(e: np.ndarray, bar: float) -> tuple[int, bool]:
 
 _CANDIDATES_CACHE: dict = memo.register({}, "generate_candidates")
 
+# Depth of the SIZE-optimal reference-allocation scan (the engine's
+# "reference view" of a pattern on a tensor, mapping-independent): the first
+# _REF_ALLOC_CAP dimension allocations, best total bits.
+_REF_ALLOC_CAP = 24
+_REF_ALLOC_CACHE: dict = memo.register({}, "reference_alloc")
+
+
+def reference_allocation(pattern: Sequence[Level], spec: TensorSpec
+                         ) -> Optional[Format]:
+    """Best size-optimal allocation of a bare ``pattern`` on ``spec``'s dims
+    (argmin total bits over the first ``_REF_ALLOC_CAP`` allocations).
+
+    This is the reference format the co-search pits against mapping-derived
+    allocations (:func:`repro.core.cosearch._reference_cf`).  Memoized by
+    (pattern, spec); :func:`generate_candidates` seeds the cache for every
+    candidate it returns as a by-product of its batched allocation scan, so
+    on the engine's own generation spec the reference never costs a second
+    scan — only ops whose dims/sparsity differ from the representative
+    tensor fall through to the one-pass recompute here."""
+    pattern = tuple(pattern)
+    sk = spec_key(spec)
+    return memo.get_or(_REF_ALLOC_CACHE,
+                       None if sk is None else (pattern, sk),
+                       lambda: _reference_allocation_impl(pattern, spec))
+
+
+def _reference_allocation_impl(pattern: tuple[Level, ...], spec: TensorSpec
+                               ) -> Optional[Format]:
+    plans = list(F.allocation_plans(pattern, spec.dims,
+                                    max_allocs=_REF_ALLOC_CAP))
+    if not plans:
+        return None
+    # one vectorized pass; argmin's first-occurrence ties match the scalar
+    # strict-less scan this replaced
+    j = int(np.argmin(analyze_plans(plans, spec).total_bits))
+    return plans[j].build()
+
 
 def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
                         penalize: bool = True,
@@ -146,6 +183,12 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
             return list(cands)
     stats = SearchStats()
     dims = list(spec.dims)
+    sk = spec_key(spec)
+    # collect the size-optimal reference allocation per pattern while the
+    # batched scan has the scored rows in hand (seeded into
+    # _REF_ALLOC_CACHE for the winners below)
+    collect_ref = use_batch and memo.enabled() and sk is not None
+    ref_plans: dict[tuple[Level, ...], F.AllocPlan] = {}
 
     def score_scalar(pattern: tuple[Level, ...], bar: float
                      ) -> Optional[Candidate]:
@@ -176,47 +219,50 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
                       ) -> Optional[Candidate]:
         """Allocations scored in vectorized chunks over raw size rows
         (:func:`repro.core.formats.allocation_plans` +
-        :func:`repro.core.sparsity.analyze_batch_rows` — no Format objects
-        for losing allocations); the early-exit semantics of the scalar
-        loop are applied as a post-hoc cut of the EqData vector, so chunks
-        stop being consumed as soon as the replayed scan breaks (overshoot
-        < one chunk)."""
+        :func:`repro.core.sparsity.analyze_plans` — no Format objects for
+        losing allocations); the early-exit semantics of the scalar loop
+        are applied as a post-hoc cut of the EqData vector, so chunks stop
+        being consumed as soon as the replayed scan breaks (overshoot
+        < one chunk).  With ``collect_ref``, the same pass also records the
+        pattern's size-optimal reference allocation (first _REF_ALLOC_CAP
+        rows, best total bits) — the scan window of the per-candidate
+        replay stays the scalar loop's own cap, so the extra rows never
+        enter the counters or the returned candidate."""
+        cap = cfg.max_allocs_per_pattern
         gen = F.allocation_plans(pattern, spec.dims,
-                                 max_allocs=cfg.max_allocs_per_pattern)
+                                 max_allocs=max(cap, _REF_ALLOC_CAP)
+                                 if collect_ref else cap)
         g = cfg.gamma ** len(pattern)
         # first chunk reaches exactly the earliest possible bar-stop
         # (index _ALLOC_MIN_SCAN); later chunks cover one patience window
-        chunk = cfg.max_allocs_per_pattern if not math.isfinite(bar) \
-            else _ALLOC_MIN_SCAN + 1
-        pat_prims = [l.prim for l in pattern]
-        head_prims: Optional[list[Prim]] = None
+        chunk = cap if not math.isfinite(bar) else _ALLOC_MIN_SCAN + 1
+        if collect_ref:
+            chunk = max(chunk, _REF_ALLOC_CAP)
         plans: list[F.AllocPlan] = []
         brs: list[tuple[int, object]] = []      # (row offset, BatchSizeReport)
         e = np.zeros(0)
+        tb = np.zeros(0)
         k = 0
         while True:
             part = list(itertools.islice(gen, chunk))
             if not part:
                 break
-            if head_prims is None:
-                head_prims = [Prim.NONE] * len(part[0].dense_head)
-            rows = [p.row_sizes() for p in part]
-            width = max(len(r) for r in rows)
-            sizes = np.array([r + [1] * (width - len(r)) for r in rows],
-                             float)
-            prim_row = head_prims + pat_prims + \
-                [Prim.NONE] * (width - len(head_prims) - len(pat_prims))
-            br = analyze_batch_rows(sizes, prim_row,
-                                    [len(r) for r in rows], spec)
+            br = analyze_plans(part, spec)
             brs.append((len(plans), br))
             plans.extend(part)
             e = np.concatenate((e, g * br.total_bits))
-            k, stopped = _alloc_scan_len(e, bar)
+            tb = np.concatenate((tb, br.total_bits))
+            k, stopped = _alloc_scan_len(e[:cap], bar)
             if stopped:
                 break
             chunk = _ALLOC_PATIENCE
         if not plans:
             return None
+        if collect_ref:
+            # first chunk already covers >= _REF_ALLOC_CAP rows, so the
+            # reference argmin sees the same prefix reference_allocation()
+            # would enumerate
+            ref_plans[pattern] = plans[int(np.argmin(tb[:_REF_ALLOC_CAP]))]
         stats.allocations_seen += k
         j = int(np.argmin(e[:k]))
         off, br = next(t for t in reversed(brs) if t[0] <= j)
@@ -256,6 +302,16 @@ def generate_candidates(spec: TensorSpec, cfg: EngineConfig = EngineConfig(),
 
     out.sort(key=lambda c: c.eq_data)
     out = out[: cfg.top_k]
+    if collect_ref:
+        # seed the reference-allocation cache for the winners: the
+        # co-search's per-op _reference_cf on the generation spec becomes a
+        # cache hit instead of a second allocation scan
+        for c in out:
+            bare = tuple(Level(l.prim, l.dim, None) for l in c.fmt.levels
+                         if l.prim is not Prim.NONE)
+            plan = ref_plans.get(bare)
+            if plan is not None:
+                _REF_ALLOC_CACHE.setdefault((bare, sk), plan.build())
     if key is not None and memo.enabled():
         _CANDIDATES_CACHE[key] = (tuple(out), stats)
     if outer_stats is not None:

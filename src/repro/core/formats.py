@@ -280,6 +280,15 @@ class AllocPlan:
         return ([int(l.size) for l in self.dense_head]   # type: ignore[arg-type]
                 + list(self.slot_sizes) + [s for _, s in self.leaves])
 
+    def prim_row(self, width: int) -> list[Prim]:
+        """Per-level primitive row aligned with :meth:`row_sizes`, padded
+        with ``NONE`` to ``width`` (leaves and padding are both dense) —
+        what the batch analyzers feed ``analyze_batch_rows``.  Shared by
+        every allocation of one pattern."""
+        head = len(self.dense_head)
+        return [Prim.NONE] * head + [l.prim for l in self.pattern] \
+            + [Prim.NONE] * (width - head - len(self.pattern))
+
     def build(self) -> Format:
         levels = tuple(l.with_size(s)
                        for l, s in zip(self.pattern, self.slot_sizes))

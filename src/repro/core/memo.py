@@ -16,7 +16,8 @@ were constructed.  Keys used across the codebase:
   * ``enumerate_mappings``:   ((M, N, K), value_bits, arch, ratio_i,
     ratio_w, spatial_top, orders);
   * ``factorizations``:       (extent, parts);
-  * ``_reference_cf``:        (pattern levels or named format, spec key);
+  * ``reference_allocation``: (bare pattern levels, spec key) — seeded by
+    ``generate_candidates`` as a by-product of its batched scan;
   * ``_search_op``:           (op shape+sparsity+count, arch, candidate
     pair, CoSearchConfig);
   * ``generate_candidates``:  (spec key, EngineConfig, penalize).
@@ -29,6 +30,12 @@ Every registered cache carries hit/miss counters (:func:`stats`,
 ``None`` key, are not counted.  Counters survive :func:`clear` (so a
 cold-cache benchmark still reports its warm-up misses) and are zeroed with
 :func:`reset_stats`.
+
+:func:`export_state` / :func:`import_state` snapshot the registry as a
+plain ``{cache name: entries}`` dict for shipping to worker processes
+(:func:`repro.core.cosearch.cosearch_multi` with ``executor="process"``):
+keys and values are value-based, so a warmed child resolves the same
+lookups the parent already paid for.
 """
 
 from __future__ import annotations
@@ -36,7 +43,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Callable, Iterator, Optional, Sequence
 
 _REGISTRY: list[dict] = []
 _enabled: bool = True
@@ -118,6 +125,54 @@ def stats_report(only_active: bool = True) -> str:
         parts.append(f"{st.name}={st.hits}/{st.lookups}"
                      f"({100.0 * st.hit_rate:.0f}%)")
     return " ".join(parts) if parts else "no-cache-activity"
+
+
+def export_state(names: Optional[Sequence[str]] = None,
+                 picklable_only: bool = True) -> dict[str, dict]:
+    """Snapshot registered caches as ``{name: {key: value}}``.
+
+    ``names`` restricts the snapshot to specific caches; by default every
+    registered cache is included.  With ``picklable_only`` (the default —
+    required when the snapshot crosses a process boundary), entries whose
+    (key, value) cannot be pickled are silently dropped: correctness never
+    depends on a cache hit, so a dropped entry just recomputes in the
+    importer."""
+    import pickle
+    out: dict[str, dict] = {}
+    for cache in _REGISTRY:
+        name = _STATS[id(cache)].name
+        if names is not None and name not in names:
+            continue
+        entries = dict(cache)
+        if picklable_only:
+            try:
+                pickle.dumps(entries)     # common case: one pass, all good
+            except Exception:
+                kept = {}
+                for k, v in entries.items():
+                    try:
+                        pickle.dumps((k, v))
+                    except Exception:
+                        continue
+                    kept[k] = v
+                entries = kept
+        out[name] = entries
+    return out
+
+
+def import_state(state: dict[str, dict]) -> None:
+    """Merge an :func:`export_state` snapshot into the registered caches.
+
+    Matching is by cache name; snapshot entries win over nothing (existing
+    entries are kept — equal keys map to equal values, both sides being
+    pure functions of the key).  Unknown names are ignored, so a snapshot
+    from a process with extra registrations imports cleanly."""
+    by_name = {_STATS[id(c)].name: c for c in _REGISTRY}
+    for name, entries in state.items():
+        cache = by_name.get(name)
+        if cache is not None:
+            for k, v in entries.items():
+                cache.setdefault(k, v)
 
 
 @contextlib.contextmanager

@@ -22,7 +22,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import memo
-from repro.core.formats import Format
+from repro.core.formats import AllocPlan, Format
 from repro.core.primitives import (DECODE_COST, LevelStats, Prim, clog2,
                                    keeps_only_nonempty, metadata_bits)
 
@@ -108,6 +108,16 @@ class TensorSpec:
         return float(self.elems * self.value_bits)
 
 
+def spec_key(spec: "TensorSpec") -> Optional[tuple]:
+    """Hashable cache key for a TensorSpec (None if the sparsity model is
+    unhashable — callers then skip their cache)."""
+    try:
+        hash(spec.sparsity)
+    except TypeError:
+        return None
+    return (tuple(spec.dims.items()), spec.sparsity, spec.value_bits)
+
+
 @dataclasses.dataclass(frozen=True)
 class SizeReport:
     """Compressed-size analysis for (format, tensor)."""
@@ -143,9 +153,21 @@ def gather_scalar(fn, vals: np.ndarray, as_int: bool = True,
     across calls (caller-owned dict)."""
     if cache is None:
         cache = {}
+    get = cache.get
+    if vals.size > 64:
+        # large batches dedupe in C first: fn still runs once per distinct
+        # value, each element still receives exactly fn(int(v))
+        uniq, inv = np.unique(vals.ravel(), return_inverse=True)
+        out_u = np.empty(len(uniq))
+        for i, v in enumerate(uniq.tolist()):
+            k = int(v) if as_int else v
+            hit = get(k, _GATHER_MISS)
+            if hit is _GATHER_MISS:
+                hit = cache[k] = fn(k)
+            out_u[i] = hit
+        return out_u[inv].reshape(vals.shape)
     flat = vals.ravel().tolist()
     out = np.empty(len(flat))
-    get = cache.get
     for i, v in enumerate(flat):
         k = int(v) if as_int else v
         hit = get(k, _GATHER_MISS)
@@ -311,6 +333,28 @@ def analyze_batch_rows(sizes: np.ndarray, prims: Sequence[Prim],
                          "analyze_batch_rows does not support it")
     row = np.array([_PRIM_CODE[p] for p in prims], np.int64)
     return _analyze_rows(sizes, row.reshape(1, L), tuple(n_levels), spec)
+
+
+def analyze_plans(plans: Sequence["AllocPlan"], spec: TensorSpec
+                  ) -> BatchSizeReport:
+    """Score a group of :class:`repro.core.formats.AllocPlan` rows — every
+    allocation of ONE pattern on one tensor — in a single
+    :func:`analyze_batch_rows` pass, without constructing
+    :class:`~repro.core.formats.Format` objects.
+
+    All plans must share the same ``dense_head`` and ``pattern`` (which is
+    what :func:`repro.core.formats.allocation_plans` yields); trailing
+    dense leaves may vary per plan and pad as ``None`` levels.  Used by the
+    engine's batched allocation scoring and the stepwise baseline's format
+    sweep."""
+    if not plans:
+        z = np.zeros(0)
+        return BatchSizeReport(z, z, z, np.zeros((0, 1)), ())
+    rows = [p.row_sizes() for p in plans]
+    width = max(len(r) for r in rows)
+    sizes = np.array([r + [1] * (width - len(r)) for r in rows], float)
+    return analyze_batch_rows(sizes, plans[0].prim_row(width),
+                              [len(r) for r in rows], spec)
 
 
 def _analyze_rows(sizes: np.ndarray, prims: np.ndarray,

@@ -1,0 +1,210 @@
+"""Vectorized stepwise-baseline + process-sharding correctness (PR 3).
+
+Pins this PR's contracts: the batched ``stepwise_search`` Search-mode sweep
+is BIT-identical to the seed per-pair loop (same designs, same
+``evaluations``, same pair visit order under the count-based budget), the
+``tile_fits_batch`` ratio-vector predicate replays scalar ``tile_fits``
+exactly, ``cosearch_multi(executor="process")`` merges to the identical
+result as the serial path, and ``memo.export_state``/``import_state``
+round-trip the cache registry.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import memo
+from repro.core.arch import ARCH2, ARCH3
+from repro.core.baselines import stepwise_search
+from repro.core.cosearch import CoSearchConfig, SearchError, cosearch_multi
+from repro.core.dataflow import (DIMS, enumerate_mappings, tile_fits,
+                                 tile_fits_batch)
+from repro.core.engine import EngineConfig
+from repro.core.sparsity import Bernoulli
+from repro.core.workload import LLMSpec, MatMul, Workload, build_llm
+
+FAST = CoSearchConfig(engine=EngineConfig(max_levels=2,
+                                          max_allocs_per_pattern=16),
+                      spatial_top=2, max_pairs=6)
+
+
+def _two_op_workload():
+    return Workload("two", (
+        MatMul("m1", 64, 96, 64, Bernoulli(0.5), Bernoulli(0.3)),
+        MatMul("m2", 128, 64, 96, Bernoulli(0.4), Bernoulli(0.6)),
+    ))
+
+
+def _fingerprint(res):
+    return (res.evaluations, res.design.energy, res.design.cycles,
+            tuple((str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+                  for o in res.design.ops))
+
+
+# ---------------------------------------------------------------------------
+# tile_fits_batch
+# ---------------------------------------------------------------------------
+
+def test_tile_fits_batch_matches_scalar():
+    """Each (ratio pair, tile) cell of the legality matrix equals the
+    scalar predicate — including ratios that flip tiles across the GLB
+    capacity edge."""
+    op = MatMul("m", 512, 512, 512, Bernoulli(0.5), Bernoulli(0.3))
+    mappings = list(enumerate_mappings(op, ARCH2, spatial_top=2))[:150]
+    tiles = np.array([[m.tile[d] for d in DIMS] for m in mappings], np.int64)
+    # ratios above 1.0 model metadata overshooting dense (the stepwise
+    # correction-loop case) and flip the largest tiles illegal
+    ri = np.array([1.0, 0.42, 1.8, 0.08])
+    rw = np.array([1.0, 0.77, 1.8, 0.05])
+    got = tile_fits_batch(op, tiles, ARCH2, ri, rw)
+    assert got.shape == (4, len(mappings))
+    for p in range(4):
+        want = [tile_fits(op, m.tile, ARCH2, float(ri[p]), float(rw[p]))
+                for m in mappings]
+        assert got[p].tolist() == want
+    # both legality outcomes must occur somewhere, else the test is vacuous
+    assert got.any() and not got.all()
+
+
+# ---------------------------------------------------------------------------
+# stepwise_search: batch vs scalar
+# ---------------------------------------------------------------------------
+
+def test_stepwise_search_mode_batch_bit_identical():
+    """Search mode under the count-based budget: same designs, same
+    evaluation count, same pair visit order."""
+    wl = _two_op_workload()
+    log_s, log_b = [], []
+    memo.clear()
+    with memo.disabled():
+        scalar = stepwise_search(wl, ARCH2, FAST, search_formats=True,
+                                 budget_pairs_per_op=120, use_batch=False,
+                                 pair_log=log_s)
+    memo.clear()
+    batch = stepwise_search(wl, ARCH2, FAST, search_formats=True,
+                            budget_pairs_per_op=120, use_batch=True,
+                            pair_log=log_b)
+    assert log_s == log_b
+    assert len(log_s) == 120 * len(wl.ops)      # budget replayed exactly
+    assert _fingerprint(scalar) == _fingerprint(batch)
+
+
+def test_stepwise_fixed_mode_batch_bit_identical():
+    wl = build_llm(LLMSpec("tiny", 2, 256, 1024, 4), seq=64,
+                   act_density=0.4, w_density=0.25)
+    memo.clear()
+    with memo.disabled():
+        scalar = stepwise_search(wl, ARCH3, FAST,
+                                 fixed_formats=("Bitmap", "Bitmap"),
+                                 use_batch=False)
+    memo.clear()
+    batch = stepwise_search(wl, ARCH3, FAST,
+                            fixed_formats=("Bitmap", "Bitmap"),
+                            use_batch=True)
+    assert _fingerprint(scalar) == _fingerprint(batch)
+
+
+@pytest.mark.parametrize("use_batch", [False, True])
+def test_stepwise_count_budget_deterministic(use_batch):
+    """budget_pairs_per_op visits exactly that many pairs per op, and two
+    runs replay the identical visit order."""
+    wl = Workload("one", (MatMul("m", 64, 96, 64,
+                                 Bernoulli(0.5), Bernoulli(0.3)),))
+    logs = []
+    for _ in range(2):
+        log: list = []
+        memo.clear()
+        stepwise_search(wl, ARCH2, FAST, search_formats=True,
+                        budget_pairs_per_op=75, use_batch=use_batch,
+                        pair_log=log)
+        assert len(log) == 75
+        logs.append(log)
+    assert logs[0] == logs[1]
+
+
+@pytest.mark.parametrize("use_batch", [False, True])
+def test_stepwise_raises_search_error_with_op_context(use_batch):
+    tiny_glb = dataclasses.replace(ARCH3.levels[1], capacity_bits=8.0)
+    doomed_arch = dataclasses.replace(
+        ARCH3, name="tiny-glb",
+        levels=(ARCH3.levels[0], tiny_glb, ARCH3.levels[2]))
+    wl = Workload("doomed", (MatMul("big", 64, 64, 64,
+                                    Bernoulli(0.5), Bernoulli(0.5)),))
+    with pytest.raises(SearchError) as ei:
+        stepwise_search(wl, doomed_arch, FAST,
+                        fixed_formats=("Bitmap", "Bitmap"),
+                        use_batch=use_batch)
+    assert ei.value.op == "big"
+    assert "big" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# cosearch_multi: process executor
+# ---------------------------------------------------------------------------
+
+def _two_tiny_workloads():
+    wl_a = build_llm(LLMSpec("A", 2, 256, 1024, 4), seq=64,
+                     act_density=0.2, w_density=0.2)
+    wl_b = build_llm(LLMSpec("B", 2, 256, 1024, 4), seq=64,
+                     act_density=0.8, w_density=0.8)
+    return wl_a, wl_b
+
+
+@pytest.mark.slow
+def test_cosearch_multi_process_executor_deterministic():
+    """The process pool (picklable items + per-worker memo snapshot) merges
+    to the identical result as the serial path — designs, eval counts,
+    winning pair, weighted metric."""
+    wls = list(_two_tiny_workloads())
+    imp = {"A": 99.0, "B": 1.0}
+    memo.clear()
+    d1, k1, v1 = cosearch_multi(wls, ARCH3, imp, FAST)
+    memo.clear()
+    d2, k2, v2 = cosearch_multi(wls, ARCH3, imp, FAST, workers=2,
+                                executor="process")
+    assert (k1, v1) == (k2, v2)
+    assert set(d1) == set(d2)
+    for name in d1:
+        assert _fingerprint(d1[name]) == _fingerprint(d2[name])
+
+
+def test_cosearch_multi_rejects_unknown_executor():
+    wls = list(_two_tiny_workloads())
+    with pytest.raises(ValueError, match="executor"):
+        cosearch_multi(wls, ARCH3, {"A": 1.0, "B": 1.0}, FAST,
+                       workers=2, executor="greenlet")
+
+
+# ---------------------------------------------------------------------------
+# memo export/import
+# ---------------------------------------------------------------------------
+
+def test_memo_export_import_round_trip():
+    cache = memo.register({}, "roundtrip-test-cache")
+    cache[("k", 1)] = {"v": np.arange(3)}
+    cache[("k", 2)] = 7
+    state = memo.export_state(names=["roundtrip-test-cache"])
+    assert set(state) == {"roundtrip-test-cache"}
+    assert set(state["roundtrip-test-cache"]) == {("k", 1), ("k", 2)}
+    cache.clear()
+    memo.import_state(state)
+    assert cache[("k", 2)] == 7
+    assert cache[("k", 1)]["v"].tolist() == [0, 1, 2]
+
+
+def test_memo_export_drops_unpicklable_entries():
+    cache = memo.register({}, "unpicklable-test-cache")
+    cache["ok"] = 1
+    cache["bad"] = lambda: None          # lambdas do not pickle
+    state = memo.export_state(names=["unpicklable-test-cache"])
+    assert state["unpicklable-test-cache"] == {"ok": 1}
+
+
+def test_memo_import_keeps_existing_and_ignores_unknown():
+    cache = memo.register({}, "import-test-cache")
+    cache["k"] = "existing"
+    memo.import_state({"import-test-cache": {"k": "snapshot", "k2": 2},
+                       "no-such-cache": {"x": 1}})
+    assert cache["k"] == "existing"      # existing entries win
+    assert cache["k2"] == 2

@@ -3,29 +3,52 @@
 The quick mode pushes a tiny model through one arch in every suite that
 implements it (fig11 / tableI / dimo — the search-plane drivers this repo's
 perf claims rest on), asserting old-vs-new equivalence along the way, so
-the benchmark drivers can't silently rot between full runs.
+the benchmark drivers can't silently rot between full runs.  ``--json``
+pins the machine-readable record (``BENCH_<n>.json`` across PRs).
 """
+
+import json
 
 import pytest
 
 from repro.core import memo
 
 
-def test_run_quick_smoke(capsys):
+def test_run_quick_smoke(capsys, tmp_path):
     from benchmarks import run as bench_run
     memo.clear()
     memo.reset_stats()
-    failures = bench_run.main(["--quick"])
+    json_path = tmp_path / "BENCH_smoke.json"
+    failures = bench_run.main(["--quick", "--json", str(json_path)])
     out = capsys.readouterr().out
     assert failures == 0, f"quick benchmark suites failed:\n{out}"
-    # the three quick-capable suites emitted their headline rows
+    # the quick-capable suites emitted their headline rows
     assert "fig11_avg_saving" in out
+    assert "fig11_workers_process" in out
     assert "engine_avg" in out
     assert "evaluator_avg" in out
+    assert "stepwise_batch_search" in out
     assert "tableI_fixed_avg" in out
     assert "dimo_batch_avg" in out
     # cache effectiveness is surfaced
     assert "memo_stats_" in out
+    # --json mirrors every CSV row plus per-suite wall-clocks
+    doc = json.loads(json_path.read_text())
+    assert doc["failures"] == 0 and doc["quick"] is True
+    names = [r["name"] for r in doc["rows"]]
+    for expected in ("fig11_avg_saving", "engine_avg", "evaluator_avg",
+                     "stepwise_batch_search", "tableI_fixed_avg",
+                     "dimo_batch_avg"):
+        assert expected in names
+    for row in doc["rows"]:
+        assert set(row) == {"name", "us_per_call", "derived"}
+        assert isinstance(row["us_per_call"], float)
+    assert doc["suite_s"] and all(s >= 0 for s in doc["suite_s"].values())
+
+
+def test_run_json_requires_path(capsys):
+    from benchmarks import run as bench_run
+    assert bench_run.main(["--json"]) == 1
 
 
 def test_run_quick_skips_suites_without_quick_mode(capsys):

@@ -63,10 +63,22 @@ def test_stepwise_matches_quality_but_costs_more_models():
 
 
 def test_stepwise_search_mode_has_budget():
+    # count-based budget: deterministic, the default for benchmarks/tests
     wl = Workload("one", (MatMul("m", 64, 96, 64,
                                  Bernoulli(0.5), Bernoulli(0.3)),))
     res = stepwise_search(wl, ARCH2, FAST, search_formats=True,
-                          budget_s_per_op=0.5)
+                          budget_pairs_per_op=60)
+    assert res.design.energy > 0
+
+
+@pytest.mark.parametrize("use_batch", [False, True])
+def test_stepwise_wall_clock_budget_still_yields_design(use_batch):
+    # a zero wall-clock budget cuts the sweep after its first pair/chunk
+    # but must still return the best design seen so far
+    wl = Workload("one", (MatMul("m", 64, 96, 64,
+                                 Bernoulli(0.5), Bernoulli(0.3)),))
+    res = stepwise_search(wl, ARCH2, FAST, search_formats=True,
+                          budget_s_per_op=0.0, use_batch=use_batch)
     assert res.design.energy > 0
 
 
