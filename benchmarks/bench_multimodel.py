@@ -10,7 +10,10 @@ sharded ``cosearch_multi`` (the flat (pair, model) work-list across a
 ``concurrent.futures`` pool — threads share the ``_search_op`` cache,
 processes shard past the GIL with per-process memo caches warmed from a
 ``memo.export_state`` snapshot; results are asserted identical either way —
-the merge is deterministic by construction).
+the merge is deterministic by construction).  ``process_cache_return``
+times a follow-up search after a process run whose workers shipped their
+``_search_op``/compile/``mapping_ctx`` deltas back to the parent — every
+per-op search replays (``fresh_evaluations`` = 0).
 """
 
 from __future__ import annotations
@@ -79,6 +82,27 @@ def run_workers_comparison(workloads, importance) -> None:
          f"scales with physical cores)")
 
 
+def run_cache_return(workloads, importance) -> None:
+    """Process workers ship their ``_search_op``/compile/``mapping_ctx``
+    cache deltas back with each item result; the parent imports them, so a
+    FOLLOW-UP search over the same op shapes replays every per-op search
+    instead of recomputing (``fresh_evaluations`` = 0)."""
+    memo.clear()
+    (_, k1, v1), t_cold = timed(cosearch_multi, workloads, ARCH3,
+                                importance, CFG, workers=2,
+                                executor="process")
+    (d2, k2, v2), t_warm = timed(cosearch_multi, workloads, ARCH3,
+                                 importance, CFG)
+    assert (k1, v1) == (k2, v2), "cache-return changed the winning pair"
+    fresh = sum(r.stats.fresh_evaluations for r in d2.values())
+    total = sum(r.stats.evaluations for r in d2.values())
+    assert fresh == 0, f"parent caches missed shipped entries: {fresh}"
+    emit("process_cache_return", t_warm * 1e6,
+         f"cold-process/warm-followup time={t_cold / max(t_warm, 1e-9):.1f}x "
+         f"fresh_evals={fresh}/{total} "
+         f"(workers shipped memo deltas to the parent)")
+
+
 def run(quick: bool = False) -> None:
     if quick:
         wl_a = build_llm(LLMSpec("A", 2, 256, 1024, 4), seq=64,
@@ -88,6 +112,7 @@ def run(quick: bool = False) -> None:
         s = _case("quick_tiny_pair", [wl_a, wl_b], {"A": 80.0, "B": 20.0},
                   "quick smoke")
         run_workers_comparison([wl_a, wl_b], {"A": 80.0, "B": 20.0})
+        run_cache_return([wl_a, wl_b], {"A": 80.0, "B": 20.0})
         emit("fig11_avg_saving", 0.0, f"{s*100:.2f}% (quick mode)")
         return
 
@@ -111,6 +136,8 @@ def run(quick: bool = False) -> None:
                "format should prioritize OPT-6.7B")
     run_workers_comparison([wl_bert, wl_opt125],
                            {"BERT-Base": 80.0, "OPT-125M": 20.0})
+    run_cache_return([wl_bert, wl_opt125],
+                     {"BERT-Base": 80.0, "OPT-125M": 20.0})
     emit("fig11_avg_saving", 0.0,
          f"{np.mean([s1, s2])*100:.2f}% (paper: 14.23%)")
 

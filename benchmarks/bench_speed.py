@@ -8,10 +8,10 @@ re-implementation is itself far faster than real Sparseloop (no YAML / no
 process spawning / shared evaluator), so expect smaller but structural >1×
 ratios here, plus the evaluation-count ratio which is machine-independent.
 
-Old-vs-new rows (``evaluator_*``, ``engine_*``, ``stepwise_batch_*``): the
-seed scalar paths (all caches bypassed) against the vectorized paths —
-results are asserted bit-identical, so the ratios are pure evaluator/engine/
-sweep engineering.  Search-mode budgets are COUNT-based
+Old-vs-new rows (``evaluator_*``, ``engine_*``, ``cosearch_gather_*``,
+``eval_threads_*``, ``stepwise_batch_*``): the previous-generation paths
+against the vectorized/gathered/threaded paths — results are asserted
+bit-identical, so the ratios are pure evaluator/engine/sweep engineering.  Search-mode budgets are COUNT-based
 (``budget_pairs_per_op``) so every row reproduces exactly run-to-run.
 ``memo_stats_*`` rows surface cache effectiveness (hits/lookups per cache).
 """
@@ -23,7 +23,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timed
 from repro.core import memo
 from repro.core.arch import ALL_ARCHS
 from repro.core.baselines import stepwise_search
@@ -132,6 +132,95 @@ def run_evaluator_comparison(quick: bool = False) -> None:
          f"throughput={np.mean(s_e):.0f}ev/s (target >=5x)")
 
 
+def run_cosearch_gather_comparison(quick: bool = False) -> None:
+    """Old-vs-new co-search evaluator plane: the PR-3 per-row format
+    repack (``use_gather=False`` — every candidate row re-packs its
+    CompiledFormat pair through ``evaluate_batch``) against the gather
+    plane (per-op ``format_fetch_table`` over the UNIQUE derived formats +
+    memoized ``mapping_ctx``, scored through ``evaluate_batch_gather``).
+    Engine/compile/mapping caches stay warm for both paths and the
+    ``search_op``/``mapping_ctx`` caches are cleared between runs, so the
+    ratio isolates the per-candidate evaluator tail.  Results are asserted
+    bit-identical."""
+    spec = TINY if quick else MODELS["LLaMA2-7B"]
+    wl = build_llm(spec, seq=128 if quick else 2048,
+                   decode_tokens=8 if quick else 128,
+                   act_density=0.75, w_density=0.75)
+    arch = ALL_ARCHS[2]
+    nogather = dataclasses.replace(CFG, use_gather=False)
+    memo.clear()
+    cosearch(wl, arch, nogather)         # warm engine/compile/mapping caches
+    memo.clear(names=["search_op", "mapping_ctx"])
+    t0 = time.perf_counter()
+    old = cosearch(wl, arch, nogather)
+    t_old = time.perf_counter() - t0
+    memo.clear(names=["search_op", "mapping_ctx"])
+    t0 = time.perf_counter()
+    new = cosearch(wl, arch, CFG)
+    t_new = time.perf_counter() - t0
+    assert old.design.edp == new.design.edp and \
+        old.evaluations == new.evaluations and \
+        [(str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+         for o in old.design.ops] == \
+        [(str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+         for o in new.design.ops], "gather plane changed co-search results"
+    tr = t_old / max(t_new, 1e-9)
+    target = "smoke budget" if quick else "target >=2x"
+    emit(f"cosearch_gather_Arch3_{spec.name}", t_new * 1e6,
+         f"repack/gather time={tr:.1f}x evals={new.evaluations} ({target})")
+
+
+def run_eval_threads_comparison(quick: bool = False) -> None:
+    """Serial vs threaded ``_evaluate_terms`` tail on one large gather
+    call (LLaMA2-7B fc1-sized op, named-format fetch tables, pseudo-random
+    candidate rows).  The tail is elementwise per row, so the threaded
+    result is asserted bit-identical — the ratio is pure chunk
+    parallelism (NumPy releases the GIL; scales with physical cores)."""
+    from repro.core.costmodel import (compile_format, dense_format,
+                                      evaluate_batch_gather,
+                                      format_fetch_table, mapping_ctx,
+                                      pack_mappings, resolve_eval_threads)
+    from repro.core.dataflow import enumerate_mappings
+    from repro.core.formats import standard_formats
+    op = MatMul("fc1", 256 if quick else 2048, 512 if quick else 4096,
+                1024 if quick else 11008, Bernoulli(0.75), Bernoulli(0.75))
+    arch = ALL_ARCHS[2]
+    spec_i = TensorSpec(op.i_dims(), op.sp_i, op.value_bits)
+    spec_w = TensorSpec(op.w_dims(), op.sp_w, op.value_bits)
+    mappings = list(enumerate_mappings(op, arch, spatial_top=3))
+    table = pack_mappings(mappings)
+    cfs_i = [dense_format(spec_i)] + [compile_format(f, spec_i)
+                                      for f in standard_formats(
+                                          spec_i.dims).values()]
+    cfs_w = [dense_format(spec_w)] + [compile_format(f, spec_w)
+                                      for f in standard_formats(
+                                          spec_w.dims).values()]
+    ft_i = format_fetch_table(cfs_i, table)
+    ft_w = format_fetch_table(cfs_w, table)
+    ctx = mapping_ctx(op, arch, table, None)
+    n = 100_000 if quick else 2_000_000
+    rng = np.random.Generator(np.random.PCG64(0))
+    map_idx = rng.integers(0, len(mappings), n)
+    i_idx = rng.integers(0, len(cfs_i), n)
+    w_idx = rng.integers(0, len(cfs_w), n)
+
+    def tail(threads):
+        return evaluate_batch_gather(op, arch, table, ft_i, i_idx, ft_w,
+                                     w_idx, map_idx, None, ctx=ctx,
+                                     eval_threads=threads)
+
+    t_serial = min(timed(tail, 1)[1] for _ in range(3))
+    t_auto = min(timed(tail, None)[1] for _ in range(3))
+    bc1, bca = tail(1), tail(None)
+    assert np.array_equal(bc1.energy, bca.energy) and \
+        np.array_equal(bc1.cycles, bca.cycles) and \
+        np.array_equal(bc1.edp, bca.edp), "threaded tail changed results"
+    auto = resolve_eval_threads(None, n)
+    emit("eval_threads_gather_tail", t_auto * 1e6,
+         f"serial/auto({auto}t) time={t_serial / max(t_auto, 1e-9):.2f}x "
+         f"rows={n} (bit-identical; scales with physical cores)")
+
+
 def run_stepwise_comparison(quick: bool = False) -> None:
     """Old-vs-new Search-mode stepwise sweep (the Table-I baseline): the
     seed per-pair loop (use_batch=False, caches bypassed) against the
@@ -184,6 +273,8 @@ def run_stepwise_comparison(quick: bool = False) -> None:
 def run(quick: bool = False) -> None:
     run_engine_comparison(quick=quick)
     run_evaluator_comparison(quick=quick)
+    run_cosearch_gather_comparison(quick=quick)
+    run_eval_threads_comparison(quick=quick)
     run_stepwise_comparison(quick=quick)
     t_ratios, e_ratios = [], []
     archs = ALL_ARCHS[2:3] if quick else ALL_ARCHS

@@ -27,7 +27,9 @@ rows and compiled in one :func:`~repro.core.sparsity.analyze_plans` pass
 per pattern group, the post-hoc legality check runs as a
 :func:`~repro.core.dataflow.tile_fits_batch` ratio-vector predicate over
 (pair, tile) matrices, and (mapping, format-pair) chunks score through
-single :func:`~repro.core.costmodel.evaluate_batch` calls.  The per-op
+single :func:`~repro.core.costmodel.evaluate_batch_gather` calls (whose
+elementwise tail chunks across threads per ``CoSearchConfig.eval_threads``
+— bit-identical for any thread count).  The per-op
 budget cutoff replays deterministically post hoc, so under the count-based
 budget the batch path visits the same pairs, picks the same designs, and
 reports the same ``evaluations`` as the seed scalar loop
@@ -406,7 +408,8 @@ def _sweep_batched(op: MatMul, arch: HardwareConfig, cfg: CoSearchConfig,
             bc = evaluate_batch_gather(op, arch, table,
                                        ft_i, pos_i[ii[c0 + pair_rows]],
                                        ft_w, pos_w[jj[c0 + pair_rows]],
-                                       map_idx, cf_o, ctx=ctx)
+                                       map_idx, cf_o, ctx=ctx,
+                                       eval_threads=cfg.eval_threads)
             metrics = bc.metric(cfg.objective)
             counts = np.bincount(pair_rows, minlength=c1 - c0)
             offs = np.concatenate(([0], np.cumsum(counts)))

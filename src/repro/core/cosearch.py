@@ -23,13 +23,25 @@ memoized :func:`repro.core.dataflow.mappings_for`, mapping-derived
 allocations are deduplicated per (tile, spatial) factor tuple (loop order
 does not enter the allocation) and derived for all tuples in one
 :func:`repro.core.engine.allocate_for_mappings` call, and the whole
-candidate set is scored in one :func:`repro.core.costmodel.evaluate_batch`
-call.  Whole `_search_op` results are memoized by (op shape+sparsity+count,
-arch, candidate pair, config) so identical layers are searched once across
-pairs and models; see :mod:`repro.core.memo` for the cache registry and key
-conventions.  :func:`cosearch_multi` flattens (pair, model) items into a
-work-list that can shard across threads or processes (``workers=``,
-``executor=``) with a deterministic merge.
+candidate set scores through the gather evaluator
+(:func:`repro.core.costmodel.evaluate_batch_gather`): the op's mapping set
+packs once, each side's UNIQUE derived/reference formats build one
+:func:`repro.core.costmodel.format_fetch_table`, candidate rows are
+(mapping, format row) index triples, and the mapping-only formula half
+(:func:`repro.core.costmodel.mapping_ctx`) is memoized by (op shape, arch,
+exact ratio tuple, cf_o) so pattern pairs with coinciding reference ratios
+share one context.  ``use_gather=False`` keeps the PR-3 per-row
+:func:`repro.core.costmodel.evaluate_batch` repack as a benchmark
+reference, ``use_batch=False`` the seed scalar loop — all three
+bit-identical.  Whole `_search_op` results are memoized by (op
+shape+sparsity+count, arch, candidate pair, config) so identical layers
+are searched once across pairs and models; see :mod:`repro.core.memo` for
+the cache registry and key conventions.  :func:`cosearch_multi` flattens
+(pair, model) items into a work-list that can shard across threads or
+processes (``workers=``, ``executor=``) with a deterministic merge;
+process workers ship their `_search_op`/compile/`mapping_ctx` cache deltas
+back for the parent to :func:`repro.core.memo.import_state`, so later
+searches over shared op shapes replay instead of recomputing.
 """
 
 from __future__ import annotations
@@ -43,9 +55,11 @@ import numpy as np
 
 from repro.core import memo
 from repro.core.arch import HardwareConfig
-from repro.core.costmodel import (CompiledFormat, CostReport, compile_format,
-                                  dense_format, evaluate, evaluate_batch,
-                                  format_key, memory_energy)
+from repro.core.costmodel import (CompiledFormat, CostReport, cf_key,
+                                  compile_format, dense_format, evaluate,
+                                  evaluate_batch, evaluate_batch_gather,
+                                  format_fetch_table, format_key, mapping_ctx,
+                                  memory_energy, pack_mappings)
 from repro.core.dataflow import Mapping, mappings_for
 from repro.core.engine import (Candidate, EngineConfig, SearchStats,
                                allocate_for_mapping, allocate_for_mappings,
@@ -82,6 +96,15 @@ class CoSearchConfig:
     compress_threshold: float = 0.999  # only compress operands sparser than this
     use_batch: bool = True             # vectorized evaluator (False = the
     #                                    legacy scalar loop, for benchmarks)
+    use_gather: bool = True            # score through evaluate_batch_gather
+    #                                    over per-op fetch tables (False =
+    #                                    the PR-3 per-row evaluate_batch
+    #                                    repack, kept as a benchmark
+    #                                    reference; bit-identical)
+    eval_threads: Optional[int] = None  # _evaluate_terms tail chunking:
+    #                                     None = auto, 1 = serial; any
+    #                                     value is bit-identical (the tail
+    #                                     is elementwise per row)
 
 
 @dataclasses.dataclass
@@ -235,9 +258,12 @@ def _search_op_key(op: MatMul, arch: HardwareConfig,
                    cfg: CoSearchConfig) -> Optional[tuple]:
     """Cache key for a whole per-op search: the op's SHAPE + sparsity +
     repeat count (its name does not enter any formula), the architecture,
-    the exact candidate pair, and the search config."""
+    the exact candidate pair, and the search config.  ``eval_threads`` is
+    normalized out of the key — it is a perf-only knob whose every setting
+    is bit-identical by contract, so thread settings share one cache."""
     key = ((op.M, op.N, op.K, op.sp_i, op.sp_w, op.sp_o, op.count,
-            op.value_bits), arch, cand_i, cand_w, cfg)
+            op.value_bits), arch, cand_i, cand_w,
+           dataclasses.replace(cfg, eval_threads=None))
     try:
         hash(key)
     except TypeError:           # unhashable sparsity model / custom config
@@ -247,14 +273,19 @@ def _search_op_key(op: MatMul, arch: HardwareConfig,
 
 def _search_op(op: MatMul, arch: HardwareConfig,
                cand_i: Optional[Candidate], cand_w: Optional[Candidate],
-               cfg: CoSearchConfig) -> tuple[Optional[OpDesign], int]:
+               cfg: CoSearchConfig) -> tuple[Optional[OpDesign], int, bool]:
     """Best (mapping, allocation) for one op under a fixed pattern pair.
 
     Two allocations compete per mapping: the mapping-DERIVED one
     (efficiency-oriented allocating — perfectly aligned, possibly larger)
     and the SIZE-optimal reference (smaller, alignment-penalized by the
     cost model).  The evaluator arbitrates, which is exactly the paper's
-    co-design argument made operational."""
+    co-design argument made operational.
+
+    Returns ``(design, evaluations, cache_hit)`` — ``evaluations`` replays
+    the recorded count on a hit (warm and cold runs stay bit-identical);
+    the flag lets callers track how much work was FRESH
+    (``SearchStats.fresh_evaluations``)."""
     key = _search_op_key(op, arch, cand_i, cand_w, cfg)
     if memo.enabled() and key is not None:
         hit = _SEARCH_OP_CACHE.get(key)
@@ -264,11 +295,11 @@ def _search_op(op: MatMul, arch: HardwareConfig,
             # the cached design came from an identically-shaped op; rebind
             # the identity (name) of THIS op
             return (dataclasses.replace(od, op=op) if od is not None
-                    else None, evals)
+                    else None, evals, True)
     od, evals = _search_op_impl(op, arch, cand_i, cand_w, cfg)
     if memo.enabled() and key is not None:
         _SEARCH_OP_CACHE[key] = (od, evals)
-    return od, evals
+    return od, evals, False
 
 
 def _derived_side(cand: Optional[Candidate], spec: TensorSpec,
@@ -284,6 +315,138 @@ def _derived_side(cand: Optional[Candidate], spec: TensorSpec,
     fmts = allocate_for_mappings(bare, spec.dims, spec.dims, rep_mappings,
                                  leaf=leaf)
     return [compile_format(f, spec) if f is not None else ref for f in fmts]
+
+
+def _factor_key(mapping: Mapping) -> tuple:
+    """Dedup key of the mapping-derived allocation: the (tile, spatial)
+    factor tuples — the loop order never enters the derivation.  Shared by
+    every plane of :func:`_search_op_impl`, whose bit-identity contract
+    depends on all of them deduplicating identically."""
+    return (tuple(mapping.tile.items()), tuple(mapping.spatial.items()))
+
+
+_MAPCTX_CACHE: dict = memo.register({}, "mapping_ctx")
+
+
+def _mapping_ctx_for(op: MatMul, arch: HardwareConfig, ratio_i: float,
+                     ratio_w: float, spatial_top: int,
+                     cf_o: Optional[CompiledFormat],
+                     mappings: Sequence[Mapping]):
+    """Packed mapping table + mapping-only evaluator context for one op's
+    mapping set, memoized by (op shape, arch, exact ratio tuple,
+    spatial_top, cf_o value key).
+
+    :func:`repro.core.dataflow.mappings_for` is deterministic in exactly
+    those inputs (names, repeat counts and sparsity models beyond the
+    densities/probabilities the context reads do not enter), so pattern
+    pairs whose reference ratios coincide — e.g. every metadata-heavy side
+    whose ratio clips to 1.0, and identically-shaped layers across models —
+    share one context instead of re-deriving it per pair.  The packed
+    table is cf_o-independent, so it caches under its own (tagged) key:
+    pairs differing only in output format share the table and only
+    re-derive the context half."""
+    base = ((op.M, op.N, op.K, op.value_bits, op.sp_i, op.sp_w), arch,
+            (ratio_i, ratio_w), spatial_top)
+    try:
+        hash((base, cf_key(cf_o)))
+        t_key = ("table", base)
+        c_key = ("ctx", base, cf_key(cf_o))
+    except TypeError:           # unhashable sparsity model
+        t_key = c_key = None
+    table = memo.get_or(_MAPCTX_CACHE, t_key,
+                        lambda: pack_mappings(mappings))
+    ctx = memo.get_or(_MAPCTX_CACHE, c_key,
+                      lambda: mapping_ctx(op, arch, table, cf_o))
+    return table, ctx
+
+
+def _side_rows(ders: Sequence[CompiledFormat], ref: CompiledFormat
+               ) -> tuple[list[CompiledFormat], np.ndarray, int]:
+    """Deduplicate one side's derived formats into fetch-table rows.
+
+    Returns (unique formats, per-rep row index, reference row index) —
+    dedup keys on :func:`format_key`, which is exact on one spec: equal
+    keys compile to value-identical :class:`CompiledFormat`\\ s."""
+    uniq: list[CompiledFormat] = []
+    pos: dict[tuple, int] = {}
+    idx = np.empty(len(ders), np.int64)
+    for r, cf in enumerate(ders):
+        k = format_key(cf.fmt)
+        p = pos.get(k)
+        if p is None:
+            p = pos[k] = len(uniq)
+            uniq.append(cf)
+        idx[r] = p
+    rk = format_key(ref.fmt)
+    rp = pos.get(rk)
+    if rp is None:
+        rp = len(uniq)
+        uniq.append(ref)
+    return uniq, idx, rp
+
+
+def _search_op_gather(op: MatMul, arch: HardwareConfig,
+                      cand_i: Optional[Candidate],
+                      cand_w: Optional[Candidate], cfg: CoSearchConfig,
+                      spec_i: TensorSpec, spec_w: TensorSpec,
+                      ref_i: CompiledFormat, ref_w: CompiledFormat,
+                      cf_o: Optional[CompiledFormat], ratio_i: float,
+                      ratio_w: float, fixed_i: bool, fixed_w: bool,
+                      mappings: Sequence[Mapping]
+                      ) -> tuple[Optional[OpDesign], int]:
+    """The gather evaluator plane of :func:`_search_op_impl`: candidate
+    rows are (mapping, I-format row, W-format row) index triples over the
+    op's packed mapping table and per-side fetch tables built from the
+    UNIQUE derived/reference formats — no per-row format repacking.  Row
+    order replays the repack path exactly (per mapping: derived pair, then
+    the reference pair when it differs), so designs, tie-breaks and
+    ``evaluations`` are bit-identical to ``use_gather=False``."""
+    n_map = len(mappings)
+    if n_map == 0:
+        return None, 0
+    # dedupe (tile, spatial) factor tuples; rep_of maps mapping -> rep row
+    reps: dict[tuple, int] = {}
+    rep_of = np.empty(n_map, np.int64)
+    rep_mappings: list[Mapping] = []
+    for j, mapping in enumerate(mappings):
+        fkey = _factor_key(mapping)
+        r = reps.get(fkey)
+        if r is None:
+            r = reps[fkey] = len(rep_mappings)
+            rep_mappings.append(mapping)
+        rep_of[j] = r
+    der_i = _derived_side(cand_i, spec_i, rep_mappings, fixed_i, ref_i)
+    der_w = _derived_side(cand_w, spec_w, rep_mappings, fixed_w, ref_w)
+    uniq_i, i_rep, ref_i_pos = _side_rows(der_i, ref_i)
+    uniq_w, w_rep, ref_w_pos = _side_rows(der_w, ref_w)
+
+    # candidate rows: per mapping the derived pair, then the reference
+    # pair when it differs by format value (the repack path's dup rule)
+    i_map, w_map = i_rep[rep_of], w_rep[rep_of]
+    dup = (i_map != ref_i_pos) | (w_map != ref_w_pos)
+    counts = 1 + dup.astype(np.int64)
+    map_idx = np.repeat(np.arange(n_map), counts)
+    is_ref = np.zeros(len(map_idx), bool)
+    is_ref[np.cumsum(counts)[dup] - 1] = True
+    i_idx = i_map[map_idx]
+    w_idx = w_map[map_idx]
+    i_idx[is_ref] = ref_i_pos
+    w_idx[is_ref] = ref_w_pos
+    evals = len(map_idx)
+
+    table, ctx = _mapping_ctx_for(op, arch, ratio_i, ratio_w,
+                                  cfg.spatial_top, cf_o, mappings)
+    ft_i = format_fetch_table(uniq_i, table)
+    ft_w = format_fetch_table(uniq_w, table)
+    bc = evaluate_batch_gather(op, arch, table, ft_i, i_idx, ft_w, w_idx,
+                               map_idx, cf_o, ctx=ctx,
+                               eval_threads=cfg.eval_threads)
+    j = int(np.argmin(bc.metric(cfg.objective)))
+    cf_i = ref_i if is_ref[j] else uniq_i[int(i_idx[j])]
+    cf_w = ref_w if is_ref[j] else uniq_w[int(w_idx[j])]
+    best = OpDesign(op, mappings[int(map_idx[j])], cf_i.fmt, cf_w.fmt,
+                    bc.report(j))
+    return best, evals
 
 
 def _search_op_impl(op: MatMul, arch: HardwareConfig,
@@ -311,13 +474,16 @@ def _search_op_impl(op: MatMul, arch: HardwareConfig,
     # orders share each).
     mappings = mappings_for(op, arch, ratio_i, ratio_w,
                             spatial_top=cfg.spatial_top)
+    if cfg.use_batch and cfg.use_gather:
+        return _search_op_gather(op, arch, cand_i, cand_w, cfg, spec_i,
+                                 spec_w, ref_i, ref_w, cf_o, ratio_i,
+                                 ratio_w, fixed_i, fixed_w, mappings)
     derived: dict[tuple, tuple[CompiledFormat, CompiledFormat]] = {}
     if cfg.use_batch:
         # batched: all deduped factor tuples of the op derived at once
         reps: dict[tuple, Mapping] = {}
         for mapping in mappings:
-            reps.setdefault((tuple(mapping.tile.items()),
-                             tuple(mapping.spatial.items())), mapping)
+            reps.setdefault(_factor_key(mapping), mapping)
         rep_mappings = list(reps.values())
         der_i = _derived_side(cand_i, spec_i, rep_mappings, fixed_i, ref_i)
         der_w = _derived_side(cand_w, spec_w, rep_mappings, fixed_w, ref_w)
@@ -327,7 +493,7 @@ def _search_op_impl(op: MatMul, arch: HardwareConfig,
     cand_mappings: list[Mapping] = []
     cand_pairs: list[tuple[CompiledFormat, CompiledFormat]] = []
     for mapping in mappings:
-        fkey = (tuple(mapping.tile.items()), tuple(mapping.spatial.items()))
+        fkey = _factor_key(mapping)
         pair = derived.get(fkey)
         if pair is None:            # legacy scalar path (use_batch=False)
             map_i = ref_i if fixed_i else \
@@ -435,8 +601,11 @@ def cosearch(workload: Workload, arch: HardwareConfig,
         ops: list[OpDesign] = []
         ok = True
         for op in workload.ops:
-            od, e = _search_op(op, arch, ci, cw, cfg)
+            od, e, hit = _search_op(op, arch, ci, cw, cfg)
             evals += e
+            stats.evaluations += e
+            if not hit:
+                stats.fresh_evaluations += e
             if od is None:
                 ok = False
                 last_fail = (op.name, pair_key)
@@ -459,33 +628,67 @@ def cosearch(workload: Workload, arch: HardwareConfig,
 # Multi-model co-search with importance scoring (§III-C3)
 # ---------------------------------------------------------------------------
 
+# Caches whose per-item deltas process workers ship back to the parent:
+# the whole-op search results plus the compile/context state they rest on.
+_RETURN_CACHES = ("search_op", "compile_format", "mapping_ctx")
+
+_WORKER_BASELINE: Optional[dict] = None
+
+
 def _multi_init_worker(state: dict) -> None:
     """Process-pool initializer: warm the child's memo caches from the
     parent's :func:`repro.core.memo.export_state` snapshot, so each worker
     starts with the candidate/compile/mapping state phase 1 already paid
-    for instead of recomputing it per process."""
+    for instead of recomputing it per process.  A key snapshot of the
+    return caches is taken here so each work item can ship back exactly
+    the entries THIS worker computed (:func:`repro.core.memo.
+    export_delta`)."""
     memo.import_state(state)
+    global _WORKER_BASELINE
+    _WORKER_BASELINE = memo.key_snapshot(_RETURN_CACHES)
 
 
 def _multi_work_item(item: tuple
-                     ) -> tuple[list[OpDesign], int, float, Optional[str]]:
+                     ) -> tuple[list[OpDesign], int, int, float,
+                                Optional[str]]:
     """One (pattern pair, model) unit of the co-search work-list.
 
     Top-level and fed a picklable tuple — (pair key, candidate pair,
     workload, arch, config) are all frozen value types — so the same
-    function runs on the serial path, thread pool, and process pool."""
+    function runs on the serial path, thread pool, and process pool.
+    Returns (designs, evaluations, fresh evaluations, seconds, failed op
+    name)."""
     key, pair, wl, arch, cfg = item
     ci, cw = pair
     t0 = time.perf_counter()
     evals = 0
+    fresh = 0
     ops: list[OpDesign] = []
     for op in wl.ops:
-        od, e = _search_op(op, arch, ci, cw, cfg)
+        od, e, hit = _search_op(op, arch, ci, cw, cfg)
         evals += e
+        if not hit:
+            fresh += e
         if od is None:
-            return ops, evals, time.perf_counter() - t0, op.name
+            return ops, evals, fresh, time.perf_counter() - t0, op.name
         ops.append(od)
-    return ops, evals, time.perf_counter() - t0, None
+    return ops, evals, fresh, time.perf_counter() - t0, None
+
+
+def _multi_work_item_return_state(item: tuple) -> tuple:
+    """:func:`_multi_work_item` plus the worker's new return-cache entries
+    since its baseline snapshot — the process path's result payload.  The
+    baseline advances past each shipped delta, so every entry crosses the
+    process boundary once per worker; the parent merges the deltas via
+    :func:`repro.core.memo.import_state` (idempotent ``setdefault``, safe
+    under overlap between workers)."""
+    out = _multi_work_item(item)
+    delta: dict = {}
+    if _WORKER_BASELINE is not None:
+        delta = memo.export_delta(_WORKER_BASELINE, _RETURN_CACHES)
+        for name, entries in delta.items():
+            _WORKER_BASELINE[name].update(entries)
+    return out + (delta,)
 
 
 def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
@@ -512,9 +715,18 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
     share serializes); ``"process"`` shards past the GIL — work items are
     picklable value tuples, and each worker warms its own memo registry
     from a :func:`repro.core.memo.export_state` snapshot of phase 1's
-    caches, so per-process state pays off immediately.  Item results
-    (designs + eval counts) are pure functions of the item, so the merged
-    output is identical across executors and worker counts."""
+    caches, so per-process state pays off immediately.  Process workers
+    also ship their new ``_search_op``/``compile_format``/``mapping_ctx``
+    entries back with each item result (:func:`repro.core.memo.
+    export_delta`), which the parent imports — the parent registry ends
+    the run as warm as a serial run's, so later models/searches sharing
+    op shapes replay instead of recomputing (pinned by the
+    ``fresh_evaluations`` regression test).  Item results (designs + eval
+    counts) are pure functions of the item, so the merged output is
+    identical across executors and worker counts — with one diagnostic
+    exception: ``SearchStats.fresh_evaluations`` reflects which items
+    found a warm cache, which under a pool depends on scheduling; it is
+    deterministic only on the serial path."""
     # -- phase 1: candidate generation, union of pattern pairs over models --
     per_model_stats: dict[str, SearchStats] = {}
     pair_keys: dict[tuple, tuple[Optional[Candidate], Optional[Candidate]]] = {}
@@ -543,10 +755,16 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
     if workers is not None and workers > 1 and executor == "process":
         from concurrent.futures import ProcessPoolExecutor
         state = memo.export_state()
+        results = []
         with ProcessPoolExecutor(max_workers=workers,
                                  initializer=_multi_init_worker,
                                  initargs=(state,)) as ex:
-            results = list(ex.map(_multi_work_item, payload))
+            for out in ex.map(_multi_work_item_return_state, payload):
+                # absorb the worker's _search_op/compile/mapping_ctx work
+                # into the parent registry: later models/searches sharing
+                # op shapes replay it instead of recomputing
+                memo.import_state(out[-1])
+                results.append(out[:-1])
     elif workers is not None and workers > 1:
         from concurrent.futures import ThreadPoolExecutor
         with ThreadPoolExecutor(max_workers=workers) as ex:
@@ -558,14 +776,18 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
     table: dict[str, dict[tuple, float]] = {wl.name: {} for wl in workloads}
     designs: dict[tuple, dict[str, SearchResult]] = {}
     last_fail: tuple[Optional[str], Optional[tuple]] = (None, None)
-    for (key, (ci, cw), wl), (ops, evals, dt, fail) in zip(work, results):
+    for (key, (ci, cw), wl), (ops, evals, fresh, dt, fail) in zip(work,
+                                                                  results):
         designs.setdefault(key, {})
         if fail is not None:
             last_fail = (fail, key)
             continue
         dp = DesignPoint(ops, *key)
         designs[key][wl.name] = SearchResult(
-            dp, evals, dt, dataclasses.replace(per_model_stats[wl.name]))
+            dp, evals, dt,
+            dataclasses.replace(per_model_stats[wl.name],
+                                evaluations=evals,
+                                fresh_evaluations=fresh))
         table[wl.name][key] = dp.metric(cfg.objective)
 
     complete = [k for k in designs if len(designs[k]) == len(workloads)]

@@ -31,12 +31,23 @@ Scalar :func:`evaluate` is a thin wrapper over a batch of one, so there is
 a single source of truth for the cost formulas.  :func:`compile_format`
 results are memoized by (format levels+name, dims, sparsity, value_bits)
 via :mod:`repro.core.memo`.
+
+:func:`evaluate_batch_gather` is the sweep entry point every search plane
+now routes through: candidates are (mapping row, I-format row, W-format
+row) index triples over a :func:`pack_mappings` table and per-population
+:func:`format_fetch_table`\\ s, the mapping-only formula half is hoisted
+into a reusable :func:`mapping_ctx`, and only the elementwise
+:func:`_evaluate_terms` tail runs per candidate — optionally chunked
+across a thread pool (``eval_threads``; the tail is elementwise per row,
+so any chunking is bit-identical to the serial pass).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import threading
 from typing import Optional, Sequence
 
 import numpy as np
@@ -109,6 +120,17 @@ def format_key(fmt: Optional[Format]) -> tuple:
     if fmt is None:
         return (None,)
     return (fmt.name, fmt.levels)
+
+
+def cf_key(cf: Optional["CompiledFormat"]) -> tuple:
+    """Value-based hashable identity of a compiled (format × tensor)
+    analysis — everything the evaluator reads from it.  Two compiles with
+    equal keys are interchangeable in any cost formula, which is what lets
+    mapping contexts memoize by (op, arch, ratios, cf_o key)."""
+    if cf is None:
+        return (None,)
+    return (format_key(cf.fmt), cf.dense_bits, cf.payload_bits, cf.levels,
+            tuple(sorted(cf.payload_granule.items())))
 
 
 _COMPILE_CACHE: dict = memo.register({}, "compile_format")
@@ -469,7 +491,8 @@ def evaluate_batch_gather(op: MatMul, arch: HardwareConfig,
                           i_idx: np.ndarray, ft_w: FormatTable,
                           w_idx: np.ndarray, map_idx: np.ndarray,
                           cf_o: Optional[CompiledFormat] = None,
-                          ctx: Optional["_MapCtx"] = None) -> BatchCost:
+                          ctx: Optional["_MapCtx"] = None,
+                          eval_threads: Optional[int] = None) -> BatchCost:
     """:func:`evaluate_batch` over gathered rows: candidate ``r`` pairs
     ``table`` row ``map_idx[r]`` with I-side format ``i_idx[r]`` and W-side
     format ``w_idx[r]`` of the precomputed :func:`format_fetch_table`\\ s.
@@ -480,17 +503,89 @@ def evaluate_batch_gather(op: MatMul, arch: HardwareConfig,
     per-(format, tile) fetch terms come from the tables, and only the
     elementwise tail runs per candidate — no per-row Python, no per-row
     alignment math.  Results are bit-identical to :func:`evaluate_batch`
-    on the materialized rows (same expressions, same operation order)."""
+    on the materialized rows (same expressions, same operation order).
+
+    ``eval_threads`` splits the :func:`_evaluate_terms` tail into
+    contiguous row chunks across a shared thread pool (NumPy releases the
+    GIL inside the array kernels).  Every tail expression is elementwise
+    over candidate rows, so the chunked result is bit-identical to the
+    serial one for ANY thread count; ``None`` (the default) picks a count
+    automatically — 1 below :data:`_EVAL_CHUNK_ROWS` rows, so small
+    batches never pay pool overhead."""
     if len(map_idx) == 0:
         return _empty_batch()
     if ctx is None:
         ctx = mapping_ctx(op, arch, table, cf_o)
-    return _evaluate_terms(
-        op, arch, ctx, map_idx,
-        ft_i.fet[i_idx, map_idx], ft_i.dec[i_idx, map_idx],
-        ft_i.ratio[i_idx],
-        ft_w.fet[w_idx, map_idx], ft_w.dec[w_idx, map_idx],
-        ft_w.ratio[w_idx])
+    args = (ft_i.fet[i_idx, map_idx], ft_i.dec[i_idx, map_idx],
+            ft_i.ratio[i_idx],
+            ft_w.fet[w_idx, map_idx], ft_w.dec[w_idx, map_idx],
+            ft_w.ratio[w_idx])
+    threads = resolve_eval_threads(eval_threads, len(map_idx))
+    if threads <= 1:
+        return _evaluate_terms(op, arch, ctx, map_idx, *args)
+    bounds = np.linspace(0, len(map_idx), threads + 1).astype(np.int64)
+    futures = [
+        _eval_pool().submit(_evaluate_terms, op, arch, ctx,
+                            map_idx[lo:hi], *(a[lo:hi] for a in args))
+        for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
+    return _concat_batch([f.result() for f in futures])
+
+
+# --- threaded tail: pool + sizing ------------------------------------------
+
+_EVAL_CHUNK_ROWS = 32768        # min rows per thread chunk (auto mode)
+_EVAL_POOL = None
+_EVAL_POOL_LOCK = threading.Lock()
+
+
+def _eval_pool():
+    """Shared thread pool for the evaluator tail, created on first use
+    (sized to the machine; per-call chunk counts are what bound fan-out)."""
+    global _EVAL_POOL
+    if _EVAL_POOL is None:
+        with _EVAL_POOL_LOCK:
+            if _EVAL_POOL is None:
+                from concurrent.futures import ThreadPoolExecutor
+                _EVAL_POOL = ThreadPoolExecutor(
+                    max_workers=max(1, os.cpu_count() or 1),
+                    thread_name_prefix="eval-tail")
+    return _EVAL_POOL
+
+
+def _reset_eval_pool() -> None:
+    # A forked child (cosearch_multi's process executor on Linux) inherits
+    # the pool OBJECT but not its worker threads — submitting to it would
+    # block forever.  Drop the reference so the child lazily builds its
+    # own pool on first threaded tail.
+    global _EVAL_POOL
+    _EVAL_POOL = None
+
+
+if hasattr(os, "register_at_fork"):
+    os.register_at_fork(after_in_child=_reset_eval_pool)
+
+
+def resolve_eval_threads(eval_threads: Optional[int], n_rows: int) -> int:
+    """The thread count a gather evaluation of ``n_rows`` rows will use:
+    an explicit ``eval_threads`` wins (floored at 1); ``None`` = auto —
+    one thread per :data:`_EVAL_CHUNK_ROWS` rows, capped at the CPU count,
+    so the pool only engages when the tail is large enough to amortize
+    thread handoff."""
+    if eval_threads is not None:
+        return max(1, int(eval_threads))
+    return max(1, min(os.cpu_count() or 1, n_rows // _EVAL_CHUNK_ROWS))
+
+
+def _concat_batch(parts: Sequence[BatchCost]) -> BatchCost:
+    """Concatenate per-chunk tail results back into one :class:`BatchCost`.
+    Every array is elementwise per candidate row, so concatenation of
+    contiguous chunks reproduces the serial arrays exactly."""
+    if len(parts) == 1:
+        return parts[0]
+    cat = {f.name: np.concatenate([getattr(p, f.name) for p in parts])
+           for f in dataclasses.fields(BatchCost)
+           if f.name not in ("e_rf", "e_mac")}
+    return BatchCost(e_rf=parts[0].e_rf, e_mac=parts[0].e_mac, **cat)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,6 +60,17 @@ class SearchStats:
     patterns_seen: int = 0
     allocations_seen: int = 0
     pruned_patterns: int = 0
+    # Evaluator-plane counters, filled by the co-search drivers:
+    # ``evaluations`` counts every candidate the search SCORED (cache hits
+    # replay the recorded count, keeping warm and cold runs bit-identical);
+    # ``fresh_evaluations`` counts only candidates actually computed this
+    # run — the share a warm ``_search_op`` cache (including entries
+    # shipped back from process workers) did NOT have to redo.  It is a
+    # DIAGNOSTIC: under thread/process executors, which work item finds a
+    # warm cache depends on scheduling, so it is deterministic only on the
+    # serial path (designs and ``evaluations`` are deterministic always).
+    evaluations: int = 0
+    fresh_evaluations: int = 0
 
 
 def eq_data(total_bits: float, levels: int, gamma: float) -> float:

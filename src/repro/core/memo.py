@@ -20,7 +20,12 @@ were constructed.  Keys used across the codebase:
     ``generate_candidates`` as a by-product of its batched scan;
   * ``_search_op``:           (op shape+sparsity+count, arch, candidate
     pair, CoSearchConfig);
-  * ``generate_candidates``:  (spec key, EngineConfig, penalize).
+  * ``generate_candidates``:  (spec key, EngineConfig, penalize);
+  * ``mapping_ctx``:          tagged entries over (op shape, arch, exact
+    (ratio_i, ratio_w) tuple, spatial_top): ``("table", base)`` holds the
+    cf_o-independent packed mapping table, ``("ctx", base, cf_o value
+    key)`` the mapping-only half of the evaluator formulas — shared
+    across pattern pairs whose reference ratios coincide.
 
 Unhashable inputs (e.g. a custom ``Sparsity`` subclass) silently skip the
 cache — correctness never depends on a hit.
@@ -35,7 +40,11 @@ cold-cache benchmark still reports its warm-up misses) and are zeroed with
 plain ``{cache name: entries}`` dict for shipping to worker processes
 (:func:`repro.core.cosearch.cosearch_multi` with ``executor="process"``):
 keys and values are value-based, so a warmed child resolves the same
-lookups the parent already paid for.
+lookups the parent already paid for.  The reverse direction is
+:func:`key_snapshot` + :func:`export_delta`: a worker records which keys
+it started with and ships back only the entries IT computed, so the
+parent's caches absorb every worker's work (later searches over shared op
+shapes replay instead of recomputing).
 """
 
 from __future__ import annotations
@@ -88,8 +97,21 @@ def set_enabled(on: bool) -> None:
     _enabled = on
 
 
-def clear() -> None:
+def clear(names: Optional[Sequence[str]] = None) -> None:
+    """Empty registered caches (all of them, or just the named ones).
+
+    Selective clearing lets benchmarks cool exactly the plane under test
+    (e.g. ``clear(names=["search_op", "mapping_ctx"])``) while the shared
+    compile/enumeration caches stay warm for both compared paths.  Unknown
+    names raise — a typo'd name silently left warm would turn a cold-cache
+    measurement into a warm-vs-warm one."""
+    if names is not None:
+        unknown = set(names) - {st.name for st in _STATS.values()}
+        if unknown:
+            raise KeyError(f"unregistered cache name(s): {sorted(unknown)}")
     for c in _REGISTRY:
+        if names is not None and _STATS[id(c)].name not in names:
+            continue
         c.clear()
 
 
@@ -137,7 +159,6 @@ def export_state(names: Optional[Sequence[str]] = None,
     (key, value) cannot be pickled are silently dropped: correctness never
     depends on a cache hit, so a dropped entry just recomputes in the
     importer."""
-    import pickle
     out: dict[str, dict] = {}
     for cache in _REGISTRY:
         name = _STATS[id(cache)].name
@@ -145,18 +166,60 @@ def export_state(names: Optional[Sequence[str]] = None,
             continue
         entries = dict(cache)
         if picklable_only:
-            try:
-                pickle.dumps(entries)     # common case: one pass, all good
-            except Exception:
-                kept = {}
-                for k, v in entries.items():
-                    try:
-                        pickle.dumps((k, v))
-                    except Exception:
-                        continue
-                    kept[k] = v
-                entries = kept
+            entries = _picklable_entries(entries)
         out[name] = entries
+    return out
+
+
+def _picklable_entries(entries: dict) -> dict:
+    import pickle
+    try:
+        pickle.dumps(entries)             # common case: one pass, all good
+        return entries
+    except Exception:
+        kept = {}
+        for k, v in entries.items():
+            try:
+                pickle.dumps((k, v))
+            except Exception:
+                continue
+            kept[k] = v
+        return kept
+
+
+def key_snapshot(names: Optional[Sequence[str]] = None) -> dict[str, set]:
+    """Current key sets of the (named) registered caches — the baseline a
+    later :func:`export_delta` diffs against."""
+    out: dict[str, set] = {}
+    for cache in _REGISTRY:
+        name = _STATS[id(cache)].name
+        if names is not None and name not in names:
+            continue
+        out[name] = set(cache.keys())
+    return out
+
+
+def export_delta(baseline: dict[str, set],
+                 names: Optional[Sequence[str]] = None,
+                 picklable_only: bool = True) -> dict[str, dict]:
+    """:func:`export_state` restricted to entries whose keys are NOT in
+    ``baseline`` (a :func:`key_snapshot`) — what THIS process computed since
+    the snapshot.  Process workers ship these back so the parent's
+    :func:`import_state` absorbs their work; caches named in ``baseline``
+    but absent from ``names`` (or vice versa) are simply skipped."""
+    out: dict[str, dict] = {}
+    for cache in _REGISTRY:
+        name = _STATS[id(cache)].name
+        if names is not None and name not in names:
+            continue
+        if name not in baseline:
+            continue
+        seen = baseline[name]
+        entries = {k: v for k, v in cache.items() if k not in seen}
+        if picklable_only:
+            entries = _picklable_entries(entries)
+        if entries:
+            out[name] = entries
     return out
 
 

@@ -169,6 +169,71 @@ def test_cosearch_multi_process_executor_deterministic():
         assert _fingerprint(d1[name]) == _fingerprint(d2[name])
 
 
+def test_second_model_sharing_shapes_replays_search():
+    """Two models with identical op shapes/sparsity: the second one's
+    per-op searches all hit the ``_search_op`` cache the first one filled
+    — its ``evaluations`` replay the recorded counts while
+    ``fresh_evaluations`` (work actually recomputed) drops to zero."""
+    wl_a = build_llm(LLMSpec("A", 2, 256, 1024, 4), seq=64,
+                     act_density=0.3, w_density=0.2)
+    wl_b = build_llm(LLMSpec("B", 2, 256, 1024, 4), seq=64,
+                     act_density=0.3, w_density=0.2)
+    memo.clear()
+    designs, _, _ = cosearch_multi([wl_a, wl_b], ARCH3,
+                                   {"A": 1.0, "B": 1.0}, FAST)
+    ra, rb = designs["A"], designs["B"]
+    assert ra.evaluations == rb.evaluations > 0
+    assert ra.stats.fresh_evaluations == ra.stats.evaluations
+    assert rb.stats.fresh_evaluations == 0
+
+
+@pytest.mark.slow
+def test_process_cache_return_ships_results_to_parent():
+    """PR-4 regression: process workers used to keep their ``_search_op``
+    results to themselves, so the parent recomputed every shared-shape op
+    on the next search.  Workers now ship their
+    ``_search_op``/compile/``mapping_ctx`` memo deltas back with each item
+    and the parent imports them — a follow-up co-search over the same
+    models replays entirely (second run's ``SearchStats.fresh_evaluations``
+    drops to zero; ``evaluations`` replays the identical counts, so
+    results stay bit-identical)."""
+    wls = list(_two_tiny_workloads())
+    imp = {"A": 99.0, "B": 1.0}
+    memo.clear()
+    d1, k1, v1 = cosearch_multi(wls, ARCH3, imp, FAST, workers=2,
+                                executor="process")
+    # the parent registry absorbed the workers' per-op search results
+    assert memo.export_state(names=["search_op"])["search_op"]
+    d2, k2, v2 = cosearch_multi(wls, ARCH3, imp, FAST)
+    assert (k1, v1) == (k2, v2)
+    for name in d2:
+        assert _fingerprint(d1[name]) == _fingerprint(d2[name])
+        assert d2[name].stats.evaluations == d2[name].evaluations > 0
+        assert d2[name].stats.fresh_evaluations == 0
+
+
+@pytest.mark.slow
+def test_process_workers_threaded_tail_after_parent_pool():
+    """Fork-safety regression: a forked worker inherits the parent's
+    evaluator thread-pool OBJECT but not its threads — submitting to it
+    would block forever.  The at-fork reset makes each child lazily build
+    its own pool, so a process run with ``eval_threads`` forced on still
+    completes and matches the serial results."""
+    from repro.core import costmodel
+    cfg = dataclasses.replace(FAST, eval_threads=2)
+    wls = list(_two_tiny_workloads())
+    imp = {"A": 99.0, "B": 1.0}
+    memo.clear()
+    d1, k1, v1 = cosearch_multi(wls, ARCH3, imp, cfg)
+    assert costmodel._EVAL_POOL is not None   # parent pool exists pre-fork
+    memo.clear()
+    d2, k2, v2 = cosearch_multi(wls, ARCH3, imp, cfg, workers=2,
+                                executor="process")
+    assert (k1, v1) == (k2, v2)
+    for name in d1:
+        assert _fingerprint(d1[name]) == _fingerprint(d2[name])
+
+
 def test_cosearch_multi_rejects_unknown_executor():
     wls = list(_two_tiny_workloads())
     with pytest.raises(ValueError, match="executor"):

@@ -1,0 +1,165 @@
+"""Memo-registry invariants (PR 4).
+
+Pins the cache behaviors the search planes now lean on: ``export_state`` /
+``import_state`` round-trip the new ``mapping_ctx`` and return-shipped
+caches, ``key_snapshot`` + ``export_delta`` ship exactly the entries a
+worker computed, ``stats()`` counters stay monotone (and untouched) across
+``import_state``, selective ``clear(names=)`` cools only the named planes,
+and ``memo.disabled()`` still yields identical search results on the
+gather plane.
+"""
+
+import numpy as np
+
+from repro.core import memo
+from repro.core.arch import ARCH3
+from repro.core.cosearch import CoSearchConfig, cosearch
+from repro.core.engine import EngineConfig
+from repro.core.workload import LLMSpec, build_llm
+
+FAST = CoSearchConfig(engine=EngineConfig(max_levels=2,
+                                          max_allocs_per_pattern=16),
+                      spatial_top=2, max_pairs=6)
+
+
+def _tiny_workload():
+    return build_llm(LLMSpec("memo-test", 1, 128, 256, 4), seq=64,
+                     act_density=0.4, w_density=0.25)
+
+
+def _fingerprint(res):
+    return (res.design.pattern_i, res.design.pattern_w, res.design.energy,
+            res.design.cycles, res.evaluations,
+            tuple((str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+                  for o in res.design.ops))
+
+
+# ---------------------------------------------------------------------------
+# mapping_ctx + return-shipped caches: export/import round trip
+# ---------------------------------------------------------------------------
+
+def test_mapping_ctx_cache_round_trips():
+    """A co-search populates the ``mapping_ctx`` cache; its entries
+    survive an export → clear → import cycle and satisfy the follow-up
+    search (every per-op result replays, zero fresh evaluations)."""
+    wl = _tiny_workload()
+    memo.clear()
+    want = _fingerprint(cosearch(wl, ARCH3, FAST))
+    state = memo.export_state(names=["mapping_ctx", "search_op",
+                                     "compile_format"])
+    assert state["mapping_ctx"], "gather plane did not populate mapping_ctx"
+    assert state["search_op"], "co-search did not populate search_op"
+    n_ctx = len(state["mapping_ctx"])
+    memo.clear()
+    memo.import_state(state)
+    memo.reset_stats()
+    res = cosearch(wl, ARCH3, FAST)
+    assert _fingerprint(res) == want
+    assert res.stats.fresh_evaluations == 0
+    assert res.stats.evaluations == res.evaluations > 0
+    # the imported entries are the ones being hit, not rebuilt copies
+    assert len(memo.export_state(names=["mapping_ctx"])["mapping_ctx"]) \
+        == n_ctx
+
+
+def test_mapping_ctx_entries_are_picklable():
+    """The mapping_ctx values (packed table + context arrays) must cross
+    the process boundary — the default picklable-only export keeps them
+    all."""
+    wl = _tiny_workload()
+    memo.clear()
+    cosearch(wl, ARCH3, FAST)
+    strict = memo.export_state(names=["mapping_ctx"], picklable_only=True)
+    loose = memo.export_state(names=["mapping_ctx"], picklable_only=False)
+    assert set(strict["mapping_ctx"]) == set(loose["mapping_ctx"])
+
+
+# ---------------------------------------------------------------------------
+# key_snapshot + export_delta
+# ---------------------------------------------------------------------------
+
+def test_export_delta_ships_only_new_entries():
+    cache = memo.register({}, "delta-test-cache")
+    cache["old"] = 1
+    base = memo.key_snapshot(["delta-test-cache"])
+    assert base == {"delta-test-cache": {"old"}}
+    delta = memo.export_delta(base, ["delta-test-cache"])
+    assert delta == {}                       # nothing new → nothing shipped
+    cache["new"] = 2
+    cache["bad"] = lambda: None              # unpicklable: silently dropped
+    delta = memo.export_delta(base, ["delta-test-cache"])
+    assert delta == {"delta-test-cache": {"new": 2}}
+    # the worker loop advances its baseline past shipped entries
+    base["delta-test-cache"].update(delta["delta-test-cache"])
+    cache["newer"] = 3
+    assert memo.export_delta(base, ["delta-test-cache"]) == \
+        {"delta-test-cache": {"newer": 3}}
+
+
+def test_export_delta_skips_unknown_and_unsnapshotted_caches():
+    memo.register({"k": 1}, "delta-other-cache")
+    # cache registered but absent from the baseline → skipped, not crashed
+    assert memo.export_delta({}, ["delta-other-cache"]) == {}
+
+
+# ---------------------------------------------------------------------------
+# stats counters across import_state
+# ---------------------------------------------------------------------------
+
+def test_stats_monotone_across_import_state():
+    """``import_state`` merges entries without touching the hit/miss
+    counters; counters only ever grow."""
+    cache = memo.register({}, "monotone-test-cache")
+    memo.get_or(cache, "a", lambda: 1)       # miss
+    memo.get_or(cache, "a", lambda: 1)       # hit
+    before = {name: (st.hits, st.misses)
+              for name, st in memo.stats().items()}
+    memo.import_state({"monotone-test-cache": {"b": 2, "a": 9},
+                       "no-such-cache": {"x": 1}})
+    after = memo.stats()
+    for name, (h, m) in before.items():
+        assert after[name].hits == h and after[name].misses == m
+    assert cache["a"] == 1                   # existing entries win
+    memo.get_or(cache, "b", lambda: 3)       # imported entry → a HIT
+    st = memo.stats()["monotone-test-cache"]
+    assert (st.hits, st.misses) == (2, 1)
+    assert cache["b"] == 2
+
+
+# ---------------------------------------------------------------------------
+# selective clear
+# ---------------------------------------------------------------------------
+
+def test_clear_names_is_selective():
+    a = memo.register({"x": 1}, "clear-test-a")
+    b = memo.register({"y": 2}, "clear-test-b")
+    memo.clear(names=["clear-test-a"])
+    assert not a and b == {"y": 2}
+    memo.clear()
+    assert not a and not b
+
+
+def test_clear_rejects_unknown_names():
+    """A typo'd name must raise, not silently leave the plane warm (a
+    cold-cache benchmark would quietly compare warm-vs-warm)."""
+    import pytest
+    with pytest.raises(KeyError, match="no-such-cache-name"):
+        memo.clear(names=["no-such-cache-name"])
+
+
+# ---------------------------------------------------------------------------
+# disabled() still yields identical search results
+# ---------------------------------------------------------------------------
+
+def test_memo_disabled_identical_search_results():
+    """Caching is an optimization, never a semantic: the gather-plane
+    co-search returns the identical design/metrics/eval counts with every
+    cache bypassed, and counts all work as fresh."""
+    wl = _tiny_workload()
+    memo.clear()
+    warm = cosearch(wl, ARCH3, FAST)
+    with memo.disabled():
+        cold = cosearch(wl, ARCH3, FAST)
+    assert _fingerprint(warm) == _fingerprint(cold)
+    assert cold.stats.fresh_evaluations == cold.stats.evaluations \
+        == cold.evaluations
