@@ -150,11 +150,12 @@ def run_cosearch_gather_comparison(quick: bool = False) -> None:
     nogather = dataclasses.replace(CFG, use_gather=False)
     memo.clear()
     cosearch(wl, arch, nogather)         # warm engine/compile/mapping caches
-    memo.clear(names=["search_op", "mapping_ctx"])
+    memo.clear(names=["search_op", "mapping_ctx", "fetch_table"])
     t0 = time.perf_counter()
     old = cosearch(wl, arch, nogather)
     t_old = time.perf_counter() - t0
-    memo.clear(names=["search_op", "mapping_ctx"])
+    memo.clear(names=["search_op", "mapping_ctx", "fetch_table"])
+    memo.reset_stats()
     t0 = time.perf_counter()
     new = cosearch(wl, arch, CFG)
     t_new = time.perf_counter() - t0
@@ -168,6 +169,11 @@ def run_cosearch_gather_comparison(quick: bool = False) -> None:
     target = "smoke budget" if quick else "target >=2x"
     emit(f"cosearch_gather_Arch3_{spec.name}", t_new * 1e6,
          f"repack/gather time={tr:.1f}x evals={new.evaluations} ({target})")
+    # fetch-table sharing across pattern pairs (PR-4 "next perf candidate"):
+    # hits = per-pair table builds the new cache avoided on this cold run
+    ft = memo.stats()["fetch_table"]
+    emit("memo_stats_fetch_table", 0.0,
+         f"fetch_table={ft.hits}/{ft.lookups}({100.0 * ft.hit_rate:.0f}%)")
 
 
 def run_eval_threads_comparison(quick: bool = False) -> None:

@@ -31,7 +31,7 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 
 def main(argv=None) -> int:
-    from benchmarks import (bench_dimo, bench_energy_validation,
+    from benchmarks import (bench_dimo, bench_energy_validation, bench_exec,
                             bench_fig5_payload, bench_fig6_penalty,
                             bench_format_opt, bench_formats_feasibility,
                             bench_kernels, bench_multimodel, bench_speed,
@@ -46,6 +46,7 @@ def main(argv=None) -> int:
         ("dimo", bench_dimo.run),
         ("feasibility", bench_formats_feasibility.run),
         ("kernels", bench_kernels.run),
+        ("exec", bench_exec.run),
     ]
     argv = list(sys.argv[1:] if argv is None else argv)
     quick = "--quick" in argv

@@ -59,6 +59,19 @@ class HybridCfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class MatmulRole:
+    """One per-layer projection weight: role name + W[N, K] extents.
+
+    ``fanout`` > 1 means the layer holds that many identically-shaped
+    weights under the role (MoE experts)."""
+
+    role: str
+    n: int                      # contraction extent (weight rows)
+    k: int                      # output extent (weight cols)
+    fanout: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
     family: str                 # dense | moe | ssm | hybrid | encdec | vlm
@@ -107,6 +120,40 @@ class ModelConfig:
         out.extend(self.hybrid.tail)
         assert len(out) == self.n_layers, (len(out), self.n_layers)
         return tuple(out)
+
+    def matmul_roles(self) -> tuple["MatmulRole", ...]:
+        """Per-layer projection weights as executable matmul roles.
+
+        Role names match the dispatch hooks in :mod:`repro.models.layers` /
+        :mod:`repro.models.attention` (``attn.wq`` … ``ffn.w_down``); MoE
+        FFNs fan out ``fanout = n_experts`` (one weight per expert, same
+        shape) under ``moe.*`` names.  ``n`` is the contraction extent
+        (weight rows), ``k`` the output extent — the execution plane's
+        W[N, K] convention."""
+        d, h = self.d_model, self.head_dim
+        nh = self.n_heads
+        nk = max(self.n_kv_heads, 1)
+        roles = [
+            MatmulRole("attn.wq", d, nh * h),
+            MatmulRole("attn.wk", d, nk * h),
+            MatmulRole("attn.wv", d, nk * h),
+            MatmulRole("attn.wo", nh * h, d),
+        ]
+        if self.moe:
+            e, f = self.moe.n_experts, self.moe.d_expert
+            roles += [
+                MatmulRole("moe.w_gate", d, f, fanout=e),
+                MatmulRole("moe.w_up", d, f, fanout=e),
+                MatmulRole("moe.w_down", f, d, fanout=e),
+            ]
+        elif self.d_ff:
+            f = self.d_ff
+            roles += [
+                MatmulRole("ffn.w_gate", d, f),
+                MatmulRole("ffn.w_up", d, f),
+                MatmulRole("ffn.w_down", f, d),
+            ]
+        return tuple(roles)
 
     def params_count(self) -> float:
         """Approximate parameter count (for roofline MODEL_FLOPS)."""

@@ -1,122 +1,20 @@
-"""Codesign bridge: SnipSnap DSE decisions → executable TPU kernel configs.
+"""Codesign bridge — compatibility shim.
 
-This closes the loop the paper opens: the DSE picks a compression format +
-dimension allocation for each sparse operator; here those choices become
-Pallas kernel selections and BlockSpec tile shapes for the execution plane
-(DESIGN.md §4).  Formats whose structure matches the block-bitmap kernel
-(`B(N₁)-B(K₁)` with dense leaves) map to ``bitmap_spmm`` with the leaf sizes
-as the block shape (MXU-aligned); 2:4-sparse operands map to ``nm_spmm``.
-Everything else stays dense (and the plan says why).
+The DSE → kernel translation grew into the execution-plane subsystem at
+:mod:`repro.exec.plans` (whole-model :class:`~repro.exec.plans.ExecPlan`\\ s,
+JSON round-trip, structured fallbacks); this module keeps the original
+import surface (``KernelChoice`` / ``CompressionPlan`` / ``ffn_workload`` /
+``plan_for_model``) alive for existing callers.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+from repro.exec.plans import (MXU_ALIGN, CompressionPlan, FallbackReason,
+                              KernelChoice, ffn_workload, plan_for_model,
+                              translate)
 
-from repro.configs.base import ModelConfig
-from repro.core.arch import TPUV5E, HardwareConfig
-from repro.core.cosearch import CoSearchConfig, SearchResult, cosearch
-from repro.core.engine import EngineConfig
-from repro.core.formats import Format
-from repro.core.primitives import Prim
-from repro.core.sparsity import NM, Bernoulli, Sparsity
-from repro.core.workload import MatMul, Workload
+# the seed's private name, kept for callers that reached into it
+_translate = translate
 
-MXU_ALIGN = 128
-
-
-@dataclasses.dataclass(frozen=True)
-class KernelChoice:
-    op_name: str
-    kind: str                  # "bitmap" | "nm" | "dense"
-    block_n: int = 0           # bitmap_spmm block shape (bn, bk)
-    block_k: int = 0
-    predicted_ratio: float = 1.0
-    format_str: str = "dense"
-
-
-@dataclasses.dataclass
-class CompressionPlan:
-    choices: dict[str, KernelChoice]
-    search: SearchResult
-
-    def for_op(self, name: str) -> KernelChoice:
-        return self.choices[name]
-
-
-def _align(x: int, extent: int) -> int:
-    """Snap a format level size to an MXU-friendly divisor of extent."""
-    for cand in (x, MXU_ALIGN, 64, 32, 16, 8):
-        if cand and extent % cand == 0 and cand <= extent:
-            return cand
-    return extent
-
-
-def ffn_workload(cfg: ModelConfig, tokens: int, w_sparsity: Sparsity,
-                 act_density: float = 1.0) -> Workload:
-    """The FFN matmuls of one layer of ``cfg`` as a SnipSnap workload."""
-    d = cfg.d_model
-    f = cfg.moe.d_expert if cfg.moe else cfg.d_ff
-    act = Bernoulli(act_density)
-    ops = (
-        MatMul("ffn.up", tokens, d, f, act, w_sparsity, cfg.n_layers),
-        MatMul("ffn.down", tokens, f, d, act, w_sparsity, cfg.n_layers),
-    )
-    return Workload(f"{cfg.name}.ffn", ops)
-
-
-def plan_for_model(cfg: ModelConfig, w_sparsity: Sparsity,
-                   tokens: int = 4096, act_density: float = 1.0,
-                   hardware: HardwareConfig = TPUV5E,
-                   search_cfg: Optional[CoSearchConfig] = None,
-                   ) -> CompressionPlan:
-    """Run the co-search on the model's FFN ops against the TPU hardware
-    model and translate the winning W-side format into kernel choices."""
-    wl = ffn_workload(cfg, tokens, w_sparsity, act_density)
-    # Hardware-constrained format space (paper §III-A: configurations are an
-    # input): the TPU execution plane implements B-over-block-grid decoding
-    # (bitmap_spmm) — so the searchable primitive set is {B} with dense
-    # leaves, i.e. block-sparse formats the MXU can actually run.
-    scfg = search_cfg or CoSearchConfig(
-        objective="energy",
-        engine=EngineConfig(max_levels=2, max_allocs_per_pattern=48,
-                            prims=(Prim.B,)))
-    if search_cfg is not None and hardware is TPUV5E:
-        scfg = dataclasses.replace(
-            search_cfg,
-            engine=dataclasses.replace(search_cfg.engine, prims=(Prim.B,)))
-    res = cosearch(wl, hardware, scfg)
-
-    choices: dict[str, KernelChoice] = {}
-    for od in res.design.ops:
-        choices[od.op.name] = _translate(od.op, od.fmt_w, w_sparsity)
-    return CompressionPlan(choices, res)
-
-
-def _translate(op: MatMul, fmt_w: Optional[Format],
-               w_sparsity: Sparsity) -> KernelChoice:
-    if isinstance(w_sparsity, NM):
-        return KernelChoice(op.name, "nm",
-                            predicted_ratio=w_sparsity.n / w_sparsity.m * 1.125,
-                            format_str="CP(2:4)")
-    if fmt_w is None:
-        return KernelChoice(op.name, "dense")
-
-    # block-bitmap realizable: compressed levels are all B, with dense-leaf
-    # (None) block factors determining the executable block shape.
-    comp = [l for l in fmt_w.levels if l.prim is not Prim.NONE]
-    leaves = {l.dim: int(l.size) for l in fmt_w.levels
-              if l.prim is Prim.NONE and l.size is not None}
-    if comp and all(l.prim is Prim.B for l in comp):
-        bn = _align(leaves.get("N", MXU_ALIGN), op.N)
-        bk = _align(leaves.get("K", MXU_ALIGN), op.K)
-        from repro.core.sparsity import TensorSpec, analyze
-        spec = TensorSpec(op.w_dims(), w_sparsity)
-        ratio = analyze(fmt_w, spec).total_bits / spec.dense_bits
-        return KernelChoice(op.name, "bitmap", bn, bk,
-                            predicted_ratio=float(ratio),
-                            format_str=str(fmt_w))
-    # non-bitmap winner (CSR/RLE-style): no native TPU kernel — dense
-    # execution with HBM-side compression only (documented limitation).
-    return KernelChoice(op.name, "dense", format_str=str(fmt_w))
+__all__ = ["MXU_ALIGN", "CompressionPlan", "FallbackReason", "KernelChoice",
+           "ffn_workload", "plan_for_model", "translate"]

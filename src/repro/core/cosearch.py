@@ -352,12 +352,37 @@ def _mapping_ctx_for(op: MatMul, arch: HardwareConfig, ratio_i: float,
         t_key = ("table", base)
         c_key = ("ctx", base, cf_key(cf_o))
     except TypeError:           # unhashable sparsity model
+        base = None
         t_key = c_key = None
     table = memo.get_or(_MAPCTX_CACHE, t_key,
                         lambda: pack_mappings(mappings))
     ctx = memo.get_or(_MAPCTX_CACHE, c_key,
                       lambda: mapping_ctx(op, arch, table, cf_o))
-    return table, ctx
+    return table, ctx, base
+
+
+_FETCH_TABLE_CACHE: dict = memo.register({}, "fetch_table")
+
+
+def _fetch_table_for(base: Optional[tuple], side: str,
+                     cfs: Sequence[CompiledFormat], table) -> "FormatTable":
+    """Per-(mapping table, format population) fetch table, memoized.
+
+    Keyed like ``mapping_ctx`` (``base`` identifies the op's packed table
+    exactly) plus the population's compiled-format value keys — pattern
+    pairs of the same op whose derived/reference populations coincide on
+    one side (very common: the W-side population repeats across every
+    I-side pattern it is paired with) share one table instead of
+    re-running the alignment broadcast per pair."""
+    key = None
+    if base is not None:
+        try:
+            key = ("ft", side, base, tuple(cf_key(cf) for cf in cfs))
+            hash(key)
+        except TypeError:
+            key = None
+    return memo.get_or(_FETCH_TABLE_CACHE, key,
+                       lambda: format_fetch_table(cfs, table))
 
 
 def _side_rows(ders: Sequence[CompiledFormat], ref: CompiledFormat
@@ -434,10 +459,10 @@ def _search_op_gather(op: MatMul, arch: HardwareConfig,
     w_idx[is_ref] = ref_w_pos
     evals = len(map_idx)
 
-    table, ctx = _mapping_ctx_for(op, arch, ratio_i, ratio_w,
-                                  cfg.spatial_top, cf_o, mappings)
-    ft_i = format_fetch_table(uniq_i, table)
-    ft_w = format_fetch_table(uniq_w, table)
+    table, ctx, base = _mapping_ctx_for(op, arch, ratio_i, ratio_w,
+                                        cfg.spatial_top, cf_o, mappings)
+    ft_i = _fetch_table_for(base, "I", uniq_i, table)
+    ft_w = _fetch_table_for(base, "W", uniq_w, table)
     bc = evaluate_batch_gather(op, arch, table, ft_i, i_idx, ft_w, w_idx,
                                map_idx, cf_o, ctx=ctx,
                                eval_threads=cfg.eval_threads)

@@ -25,7 +25,10 @@ were constructed.  Keys used across the codebase:
     (ratio_i, ratio_w) tuple, spatial_top): ``("table", base)`` holds the
     cf_o-independent packed mapping table, ``("ctx", base, cf_o value
     key)`` the mapping-only half of the evaluator formulas — shared
-    across pattern pairs whose reference ratios coincide.
+    across pattern pairs whose reference ratios coincide;
+  * ``fetch_table``:          ("ft", side, mapping_ctx base, population
+    cf_keys) — per-(mapping table, format population) fetch matrices,
+    shared across pattern pairs whose side populations coincide.
 
 Unhashable inputs (e.g. a custom ``Sparsity`` subclass) silently skip the
 cache — correctness never depends on a hit.

@@ -81,6 +81,34 @@ class NM(Sparsity):
         return 1.0 - num / math.comb(self.m, c)
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockBernoulli(Sparsity):
+    """Zeros clustered into whole blocks of ``block_elems`` elements: a
+    block is entirely non-zero with probability ``density``, entirely zero
+    otherwise (what block pruning produces — element density equals block
+    density, but the zeros are NOT i.i.d.).
+
+    The distinction matters to the cost model: under i.i.d. ``Bernoulli``
+    a bn×bk tile is almost surely non-empty at any useful density, so a
+    block-bitmap format predicts near-dense payload traffic; under the
+    clustered model ``prob_nonempty`` of a within-block window is just
+    ``density``, matching what the execution plane measures on real
+    block-pruned weights (see :mod:`repro.exec.calibrate`)."""
+
+    density: float
+    block_elems: int            # elements per pruning block (bn · bk)
+
+    def prob_nonempty(self, elems: float) -> float:
+        if self.density <= 0.0:
+            return 0.0
+        if self.density >= 1.0:
+            return 1.0
+        # a window of `elems` elements touches ~max(1, elems/block) blocks;
+        # it is empty only if every touched block is pruned
+        touched = max(1.0, elems / self.block_elems)
+        return 1.0 - (1.0 - self.density) ** touched
+
+
 DENSE = Bernoulli(1.0)
 
 

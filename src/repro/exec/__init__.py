@@ -1,0 +1,25 @@
+"""Execution plane: searched designs become running compressed models.
+
+  * :mod:`repro.exec.plans`     — whole-model :class:`ExecPlan`s (per-layer
+    attention QKV/O + FFN ops, MoE expert fan-out), JSON round-trippable;
+  * :mod:`repro.exec.compress`  — apply a plan to a real weight pytree
+    (bitmap / N:M / dense stores with exact achieved-ratio accounting);
+  * :mod:`repro.exec.dispatch`  — swap the models' dense projection einsums
+    for the compressed Pallas kernels per plan entry;
+  * :mod:`repro.exec.calibrate` — measured-vs-predicted traffic counters,
+    least-squares energy-coefficient fitting, search re-run drift report.
+"""
+
+from repro.exec.plans import (ExecPlan, FallbackReason, KernelChoice, OpPlan,
+                              build_exec_plan, model_workload)
+from repro.exec.compress import CompressedStore, compress_params, prune_params
+from repro.exec.dispatch import CompressedModel, OpCounters, instrument
+from repro.exec.calibrate import CalibrationReport, calibrate
+
+__all__ = [
+    "ExecPlan", "FallbackReason", "KernelChoice", "OpPlan",
+    "build_exec_plan", "model_workload",
+    "CompressedStore", "compress_params", "prune_params",
+    "CompressedModel", "OpCounters", "instrument",
+    "CalibrationReport", "calibrate",
+]

@@ -1,0 +1,152 @@
+"""Measured-vs-predicted calibration loop.
+
+Closes the loop the analytical co-search leaves open: run the plan's
+compressed model under :func:`repro.exec.dispatch.instrument`, compare the
+EXACT per-role fetched bits against the cost model's expected fetch terms
+(:class:`~repro.exec.plans.OpPlan` ``predicted_w_fetch_bits``), fit a
+per-:class:`~repro.core.arch.HardwareConfig` energy-coefficient scalar by
+least squares, and re-run the search with the calibrated hardware to report
+prediction drift.
+
+Why predictions drift: the search's statistical sparsity model may not
+match the realized weights — e.g. i.i.d. ``Bernoulli`` predicts near-dense
+bitmap payloads (any large block is almost surely non-empty) while block
+pruning clusters zeros into whole blocks, so measured traffic comes in at
+~the block density.  Calibration absorbs the aggregate mismatch into the
+DRAM energy coefficient (the per-bit cost the search actually ranks
+designs by); a model-aware spec (``BlockBernoulli``) makes the fit scale
+≈ 1 and the residuals collapse — both paths are exercised in
+``benchmarks/bench_exec.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.arch import HardwareConfig
+from repro.core.cosearch import CoSearchConfig
+from repro.exec.dispatch import OpCounters
+from repro.exec.plans import ExecPlan, build_exec_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibRow:
+    """One role's measured-vs-predicted W-side fetch comparison (bits per
+    full pass over the weight)."""
+
+    role: str
+    kind: str
+    measured_bits: float
+    predicted_bits: float
+
+    @property
+    def rel_err(self) -> float:
+        if self.predicted_bits == 0.0:
+            return 0.0
+        return self.measured_bits / self.predicted_bits - 1.0
+
+    def residual(self, scale: float) -> float:
+        """Relative error after scaling predictions by ``scale``."""
+        p = self.predicted_bits * scale
+        return self.measured_bits / p - 1.0 if p else 0.0
+
+
+def compare(plan: ExecPlan, counters: dict[str, OpCounters]
+            ) -> list[CalibRow]:
+    """Join measured per-call counters with the plan's predicted terms."""
+    rows = []
+    for op in plan.ops:
+        c = counters.get(op.role)
+        if c is None or not c.calls:
+            continue
+        rows.append(CalibRow(role=op.role, kind=op.choice.kind,
+                             measured_bits=c.w_fetch_bits_per_call,
+                             predicted_bits=op.predicted_w_fetch_bits))
+    return rows
+
+
+def fit_scale(rows: Sequence[CalibRow]) -> float:
+    """Least-squares scalar s minimizing Σ (s·predicted − measured)²."""
+    num = sum(r.predicted_bits * r.measured_bits for r in rows)
+    den = sum(r.predicted_bits ** 2 for r in rows)
+    return num / den if den else 1.0
+
+
+def calibrated_hardware(arch: HardwareConfig, scale: float
+                        ) -> HardwareConfig:
+    """``arch`` with its DRAM energy coefficient scaled by the fit.
+
+    The scalar folds the measured/predicted traffic ratio into the per-bit
+    DRAM cost, so the search's energy objective ranks candidates by what
+    the execution plane will actually move."""
+    dram = arch.levels[0]
+    dram = dataclasses.replace(
+        dram,
+        pj_per_bit_read=dram.pj_per_bit_read * scale,
+        pj_per_bit_write=dram.pj_per_bit_write * scale)
+    return dataclasses.replace(
+        arch, name=f"{arch.name}+cal{scale:.3g}",
+        levels=(dram,) + arch.levels[1:])
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """The full loop's outcome: fit quality + re-search drift."""
+
+    rows: list[CalibRow]
+    scale: float                    # fitted energy-coefficient scalar
+    max_rel_err: float              # worst |measured/predicted − 1| pre-fit
+    max_residual: float             # worst residual AFTER applying the fit
+    baseline_energy: float          # Σ predicted op energy, original arch
+    calibrated_energy: float        # same under the calibrated arch re-search
+    calibrated_plan: ExecPlan
+    kinds_changed: dict[str, tuple[str, str]]   # role → (before, after)
+
+    @property
+    def energy_drift(self) -> float:
+        """Relative predicted-energy change after calibration."""
+        if self.baseline_energy == 0.0:
+            return 0.0
+        return self.calibrated_energy / self.baseline_energy - 1.0
+
+
+def calibrate(cfg: ModelConfig, plan: ExecPlan,
+              counters: dict[str, OpCounters],
+              search_cfg: Optional[CoSearchConfig] = None
+              ) -> CalibrationReport:
+    """Fit the energy coefficient and re-run the search calibrated.
+
+    ``plan`` must have been built for ``cfg``; ``counters`` come from a
+    :func:`repro.exec.dispatch.instrument` run of its compressed model.
+    The re-search reuses the plan's own workload knobs (tokens,
+    activation density, value width)."""
+    rows = compare(plan, counters)
+    if not rows:
+        raise ValueError("no measured counters overlap the plan's roles")
+    scale = fit_scale(rows)
+    # plan.hardware() already carries the plan's own energy_scale, so
+    # repeated calibration rounds compose multiplicatively
+    arch_cal = calibrated_hardware(plan.hardware(), scale)
+    plan_cal = build_exec_plan(cfg, plan.sparsity, tokens=plan.tokens,
+                               act_density=plan.act_density,
+                               hardware=arch_cal, search_cfg=search_cfg,
+                               value_bits=plan.value_bits)
+    # keep the BASE arch name (resolvable through arch_by_name after a
+    # JSON round trip) + the composed scale on the plan itself
+    plan_cal = dataclasses.replace(
+        plan_cal, arch=plan.arch, energy_scale=plan.energy_scale * scale)
+    changed = {}
+    for op in plan.ops:
+        after = plan_cal.for_role(op.role)
+        if after.choice.kind != op.choice.kind:
+            changed[op.role] = (op.choice.kind, after.choice.kind)
+    return CalibrationReport(
+        rows=rows, scale=scale,
+        max_rel_err=max(abs(r.rel_err) for r in rows),
+        max_residual=max(abs(r.residual(scale)) for r in rows),
+        baseline_energy=sum(op.predicted_energy for op in plan.ops),
+        calibrated_energy=sum(op.predicted_energy for op in plan_cal.ops),
+        calibrated_plan=plan_cal,
+        kinds_changed=changed)

@@ -1,0 +1,196 @@
+"""Apply an :class:`~repro.exec.plans.ExecPlan` to a real weight pytree.
+
+Walks the model's stacked layer parameters, slices each (layer, role)
+projection weight out, and stores it in the plan's chosen representation:
+:class:`~repro.kernels.ops.BitmapCompressed`,
+:class:`~repro.kernels.ops.NMCompressed`, or the dense array.  Every entry
+carries EXACT achieved-size accounting (payload + metadata bits of the
+realized weights, not the statistical expectation), which is what the
+calibration loop compares the cost model's predictions against.
+
+Compression is lossless for weights that already carry the plan's sparsity
+structure (block-sparse for bitmap entries, N:M for nm entries);
+:func:`prune_params` produces such weights from a dense pytree.  MoE roles
+fan out per expert (one entry per (layer, role, expert)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.sparsity import NM
+from repro.exec.plans import ExecPlan, OpPlan
+from repro.kernels import ops as kops
+from repro.sparse import masks
+
+
+def _role_path(role: str) -> tuple[str, str]:
+    """Dispatch role → (sub-tree, leaf) inside one layer's param dict."""
+    group, leaf = role.split(".", 1)
+    if group == "attn":
+        return "attn", leaf
+    if group in ("ffn", "moe"):
+        return "ffn", leaf
+    raise KeyError(f"unknown role {role!r}")
+
+
+@dataclasses.dataclass
+class CompressedTensor:
+    """One (layer, role[, expert]) weight in its executable representation."""
+
+    layer: int
+    role: str
+    expert: int                # -1 for non-MoE roles
+    kind: str                  # "bitmap" | "nm" | "dense"
+    data: Any                  # BitmapCompressed | NMCompressed | jax.Array
+    dense_bits: float
+    stored_bits: float
+
+    @property
+    def achieved_ratio(self) -> float:
+        return self.stored_bits / self.dense_bits
+
+
+@dataclasses.dataclass
+class CompressedStore:
+    """The compressed parameter store an :class:`ExecPlan` serves from."""
+
+    plan: ExecPlan
+    entries: dict[tuple[int, str, int], CompressedTensor]
+
+    def get(self, layer: int, role: str, expert: int = -1
+            ) -> Optional[CompressedTensor]:
+        return self.entries.get((layer, role, expert))
+
+    def __iter__(self) -> Iterator[CompressedTensor]:
+        return iter(self.entries.values())
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -- achieved-ratio accounting -----------------------------------------
+    def achieved_ratio(self, role: Optional[str] = None) -> float:
+        """stored/dense bits over the whole store (or one role), exact."""
+        es = [e for e in self if role is None or e.role == role]
+        dense = sum(e.dense_bits for e in es)
+        return sum(e.stored_bits for e in es) / dense if dense else 1.0
+
+    def ratio_report(self) -> dict[str, float]:
+        roles = sorted({e.role for e in self})
+        out = {r: self.achieved_ratio(r) for r in roles}
+        out["total"] = self.achieved_ratio()
+        return out
+
+
+def _stored_bits(kind: str, data: Any, vb: int) -> float:
+    """Exact stored size: payload + metadata of the realized encoding."""
+    if kind == "bitmap":
+        nnzb = int(np.asarray(data.counts).sum())   # true non-zero blocks
+        gn, gk = data.n // data.bn, data.k // data.bk
+        return float(nnzb * data.bn * data.bk * vb + gn * gk)
+    if kind == "nm":
+        idx_bits = max(1, math.ceil(math.log2(data.m_group)))
+        return float(data.values.size * vb + data.indices.size * idx_bits)
+    return float(data.size * vb)
+
+
+def _layer_weight(params: dict, layer: int, role: str, expert: int
+                  ) -> jax.Array:
+    group, leaf = _role_path(role)
+    w = params["blocks"][group][leaf]
+    w = w[layer]
+    if expert >= 0:
+        w = w[expert]
+    return w
+
+
+def _check_uniform(cfg: ModelConfig) -> None:
+    if cfg.hybrid is not None or cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"exec plane serves uniform attention stacks; {cfg.name} is "
+            f"family={cfg.family!r} hybrid={cfg.hybrid!r}")
+
+
+def _fanout(plan_op: OpPlan, cfg: ModelConfig) -> range:
+    if plan_op.role.startswith("moe."):
+        assert cfg.moe is not None
+        return range(cfg.moe.n_experts)
+    return range(-1, 0)          # single entry, expert = -1
+
+
+def compress_params(params: dict, plan: ExecPlan, cfg: ModelConfig
+                    ) -> CompressedStore:
+    """Compress every planned (layer, role[, expert]) weight of ``params``.
+
+    ``params`` is a :meth:`repro.models.transformer.Model.init` pytree whose
+    weights already carry the plan's sparsity structure (see
+    :func:`prune_params`).  Dense-kind entries keep the raw array (the
+    dispatcher falls through to the dense einsum)."""
+    _check_uniform(cfg)
+    sp = plan.sparsity
+    n_sel, m_group = (sp.n, sp.m) if isinstance(sp, NM) else (2, 4)
+    entries: dict[tuple[int, str, int], CompressedTensor] = {}
+    for op in plan.ops:
+        ch = op.choice
+        for layer in range(cfg.n_layers):
+            for expert in _fanout(op, cfg):
+                w = _layer_weight(params, layer, op.role, expert)
+                vb = w.dtype.itemsize * 8
+                dense_bits = float(w.size * vb)
+                if ch.kind == "bitmap":
+                    data: Any = kops.compress_bitmap(
+                        np.asarray(w), ch.block_n, ch.block_k)
+                elif ch.kind == "nm":
+                    data = kops.compress_nm(np.asarray(w), n_sel, m_group)
+                else:
+                    data = jnp.asarray(w)
+                entries[(layer, op.role, expert)] = CompressedTensor(
+                    layer=layer, role=op.role, expert=expert, kind=ch.kind,
+                    data=data, dense_bits=dense_bits,
+                    stored_bits=_stored_bits(ch.kind, data, vb))
+    return CompressedStore(plan, entries)
+
+
+def prune_params(params: dict, plan: ExecPlan, cfg: ModelConfig) -> dict:
+    """Prune ``params`` to the plan's servable sparsity structure.
+
+    Bitmap roles get block pruning at the plan's block shape and target
+    density; nm roles get 2:4 pruning; dense roles pass through.  Returns a
+    new pytree (the input is not mutated) — the dense REFERENCE forward
+    should run on this same pruned tree so compressed-vs-dense comparisons
+    isolate kernel numerics, not pruning error."""
+    _check_uniform(cfg)
+    sp = plan.sparsity
+    density = sp.density
+    n_sel, m_group = (sp.n, sp.m) if isinstance(sp, NM) else (2, 4)
+    blocks = dict(params["blocks"])          # group dicts copied on write
+    out = dict(params)
+    out["blocks"] = blocks
+    for op in plan.ops:
+        ch = op.choice
+        if ch.kind == "dense":
+            continue
+        group, leaf = _role_path(op.role)
+        w = blocks[group][leaf]
+
+        def prune_one(w2d):
+            if ch.kind == "bitmap":
+                return masks.block_prune(w2d, ch.block_n, ch.block_k, density)
+            return masks.nm_prune(w2d, n_sel, m_group)
+
+        if w.ndim == 3:                               # (L, n, k)
+            pruned = jnp.stack([prune_one(w[l]) for l in range(w.shape[0])])
+        else:                                         # (L, E, n, k) — MoE
+            pruned = jnp.stack([
+                jnp.stack([prune_one(w[l, e]) for e in range(w.shape[1])])
+                for l in range(w.shape[0])])
+        blocks[group] = dict(blocks[group])
+        blocks[group][leaf] = pruned
+    return out

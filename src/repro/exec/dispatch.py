@@ -1,0 +1,194 @@
+"""Plan-driven matmul dispatch: compressed kernels inside the real model.
+
+The transformer's FFN/attention projections all route through
+:func:`repro.models.layers.proj`.  :class:`CompressedModel` installs a hook
+there and walks the layer stack in a per-layer Python loop (compressed
+operands differ per layer, so the stacked ``lax.scan`` cannot carry them),
+swapping each planned (layer, role) projection for the matching Pallas
+kernel — ``bitmap_spmm`` / ``nm_spmm``, interpret mode on CPU, native on
+TPU — while dense-kind roles fall through to the exact einsum the dense
+model runs.  Because the surrounding forward IS the dense model's code
+path (:func:`repro.models.transformer._attn_layer` per layer), compressed
+and dense forwards differ only by kernel accumulation order.
+
+Kernel wrappers are jit-cached per static configuration
+(:func:`repro.kernels.ops` ``_jitted``), so repeated layers that share a
+block shape reuse one compiled kernel.
+
+:func:`instrument` turns on per-role traffic counters: every dispatched
+matmul records the EXACT bits its operands move (realized payload +
+metadata of the compressed store, not the statistical expectation) plus
+MACs and decode operations — the measured half of the calibration loop
+(:mod:`repro.exec.calibrate`).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.exec.compress import CompressedStore, CompressedTensor
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# Measured traffic counters
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpCounters:
+    """Accumulated measured traffic of one dispatch role."""
+
+    calls: int = 0
+    w_fetch_bits: float = 0.0     # payload + metadata, realized encoding
+    x_bits: float = 0.0
+    y_bits: float = 0.0
+    macs: float = 0.0             # useful MACs (compressed operand elems × M)
+    decode_ops: float = 0.0       # metadata units decoded (blocks / indices)
+
+    @property
+    def w_fetch_bits_per_call(self) -> float:
+        return self.w_fetch_bits / self.calls if self.calls else 0.0
+
+
+_ACTIVE_COUNTERS: Optional[dict[str, OpCounters]] = None
+
+
+@contextlib.contextmanager
+def instrument() -> Iterator[dict[str, OpCounters]]:
+    """Collect per-role :class:`OpCounters` for every dispatched projection
+    executed inside the context (nested dispatchers share the dict)."""
+    global _ACTIVE_COUNTERS
+    prev = _ACTIVE_COUNTERS
+    counters: dict[str, OpCounters] = {}
+    _ACTIVE_COUNTERS = counters
+    try:
+        yield counters
+    finally:
+        _ACTIVE_COUNTERS = prev
+
+
+def _record(role: str, x2: jax.Array, y_k: int,
+            w_bits: float, macs: float, decode_ops: float) -> None:
+    if _ACTIVE_COUNTERS is None:
+        return
+    c = _ACTIVE_COUNTERS.setdefault(role, OpCounters())
+    c.calls += 1
+    c.w_fetch_bits += w_bits
+    c.x_bits += float(x2.size * x2.dtype.itemsize * 8)
+    c.y_bits += float(x2.shape[0] * y_k * 32)        # kernels emit float32
+    c.macs += macs
+    c.decode_ops += decode_ops
+
+
+def measured_w_bits(entry: CompressedTensor) -> float:
+    """Realized W-side bits one full pass over ``entry`` fetches."""
+    return entry.stored_bits
+
+
+# ---------------------------------------------------------------------------
+# The dispatcher (repro.models.layers.proj hook)
+# ---------------------------------------------------------------------------
+
+def _tile(extent: int, cap: int = 128, multiple: int = 1) -> int:
+    """Largest divisor of ``extent`` that is ≤ cap (and a multiple of
+    ``multiple`` when possible) — kernel grid tiles must divide extents."""
+    t = min(extent, cap)
+    while t > 1 and (extent % t or t % multiple):
+        t -= 1
+    return max(t, 1)
+
+
+class _Dispatcher:
+    """The installed ``proj`` hook: per-(layer, role) kernel dispatch."""
+
+    def __init__(self, store: CompressedStore):
+        self.store = store
+        self.layer = 0
+
+    def __call__(self, x: jax.Array, w: jax.Array, role: str
+                 ) -> Optional[jax.Array]:
+        entry = self.store.get(self.layer, role)
+        if entry is None:
+            return None                       # unplanned role: dense einsum
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        m = x2.shape[0]
+        if entry.kind == "bitmap":
+            d = entry.data
+            nnzb = int(np.asarray(d.counts).sum())
+            _record(role, x2, d.k, w_bits=entry.stored_bits,
+                    macs=float(m) * nnzb * d.bn * d.bk,
+                    decode_ops=float(nnzb))
+            y = kops.bitmap_spmm(x2, d, bm=_tile(m))
+        elif entry.kind == "nm":
+            d = entry.data
+            _record(role, x2, d.k, w_bits=entry.stored_bits,
+                    macs=float(m) * d.values.size,
+                    decode_ops=float(d.indices.size))
+            y = kops.nm_spmm(x2, d, bm=_tile(m),
+                             bn=_tile(d.n, multiple=d.m_group),
+                             bk=_tile(d.k))
+        else:
+            # dense-kind: record the dense traffic, run the standard einsum
+            _record(role, x2, w.shape[-1],
+                    w_bits=entry.stored_bits,
+                    macs=float(m) * w.size, decode_ops=0.0)
+            return None
+        return y.astype(x.dtype).reshape(*lead, y.shape[-1])
+
+
+@contextlib.contextmanager
+def active(store: CompressedStore) -> Iterator[_Dispatcher]:
+    """Install the dispatch hook for ``store`` on the model layers."""
+    disp = _Dispatcher(store)
+    L.set_proj_hook(disp)
+    try:
+        yield disp
+    finally:
+        L.set_proj_hook(None)
+
+
+# ---------------------------------------------------------------------------
+# Compressed forward
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompressedModel:
+    """A served model: dense params for the un-planned pieces + a
+    :class:`CompressedStore` for every planned projection.
+
+    Mirrors :meth:`repro.models.transformer.Model.hidden_states` for
+    uniform attention stacks, reusing the model's own layer body per layer
+    (the hook swaps the projections) — MoE FFNs currently execute dense
+    (their plan entries are accounting-only), matching the store's
+    ``kind="dense"`` fall-through."""
+
+    model: T.Model
+    store: CompressedStore
+
+    def hidden_states(self, params, tokens: jax.Array) -> jax.Array:
+        cfg = self.model.cfg
+        b, s = tokens.shape
+        x = L.embed(tokens, params["embed"])
+        positions = jnp.arange(s)
+        freqs = L.rope_freqs(cfg)
+        with active(self.store) as disp:
+            for layer in range(cfg.n_layers):
+                disp.layer = layer
+                p = jax.tree.map(lambda a: a[layer], params["blocks"])
+                x = T._attn_layer(x, p, cfg, freqs, positions, causal=True,
+                                  window=cfg.window)
+        return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def logits(self, params, tokens: jax.Array) -> jax.Array:
+        x = self.hidden_states(params, tokens)
+        return jnp.einsum("btd,vd->btv", x,
+                          params["embed"].astype(L.COMPUTE_DTYPE))

@@ -4,6 +4,14 @@ On CPU (this container) the Pallas kernels run in ``interpret=True`` mode;
 on TPU they compile natively.  Compression runs host-side (numpy) — it is
 the SnipSnap format decoder's software half: the chosen format's metadata
 becomes scalar-prefetch arrays whose layout mirrors the kernel tiling.
+
+The jitted wrappers are CACHED per static-knob tuple (``_jitted``): the
+seed rebuilt ``jax.jit(functools.partial(...))`` on every call, which made
+every invocation a fresh jit object and threw away XLA's compile cache —
+repeated layers of a served model each paid a retrace.  Now the partial is
+built once per (kernel, static args) key and jax's own per-shape cache does
+the rest; :func:`kernel_cache_stats` exposes hit counters so tests can pin
+that the second call of a shape reuses the first's compilation.
 """
 
 from __future__ import annotations
@@ -22,6 +30,40 @@ from repro.kernels.nm_spmm import nm_spmm_pallas
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Jitted-wrapper cache (per-op: repeated layers share one compiled kernel)
+# ---------------------------------------------------------------------------
+
+_JIT_CACHE: dict[tuple, object] = {}
+_JIT_STATS = {"hits": 0, "misses": 0}
+
+
+def _jitted(kind: str, builder, *static) -> object:
+    """The jitted kernel wrapper for ``(kind, *static)``, built once.
+
+    ``builder`` receives the static args and returns the function to jit.
+    jax.jit's own signature cache then handles per-shape retraces, so a
+    model whose layers share a kernel configuration compiles it once."""
+    key = (kind,) + static
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        _JIT_STATS["misses"] += 1
+        fn = _JIT_CACHE[key] = jax.jit(builder(*static))
+    else:
+        _JIT_STATS["hits"] += 1
+    return fn
+
+
+def kernel_cache_stats() -> dict[str, int]:
+    """Hit/miss counters of the jitted-wrapper cache (plus its size)."""
+    return dict(_JIT_STATS, entries=len(_JIT_CACHE))
+
+
+def clear_kernel_cache() -> None:
+    _JIT_CACHE.clear()
+    _JIT_STATS["hits"] = _JIT_STATS["misses"] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -60,12 +102,16 @@ def compress_bitmap(w, bn: int = 128, bk: int = 128) -> BitmapCompressed:
         max_per_col=int(counts.max()) if counts.size else 1)
 
 
+def _bitmap_builder(k: int, bm: int, interpret: bool):
+    return functools.partial(bitmap_spmm_pallas, k=k, bm=bm,
+                             interpret=interpret)
+
+
 def bitmap_spmm(x: jax.Array, w: BitmapCompressed, bm: int = 128
                 ) -> jax.Array:
     """Y = X @ W_blocksparse; dispatches to the Pallas kernel."""
-    fn = functools.partial(bitmap_spmm_pallas, k=w.k, bm=bm,
-                           interpret=_interpret())
-    return jax.jit(fn)(x, w.blocks, w.counts, w.row_ids, w.offsets)
+    fn = _jitted("bitmap", _bitmap_builder, w.k, bm, _interpret())
+    return fn(x, w.blocks, w.counts, w.row_ids, w.offsets)
 
 
 # ---------------------------------------------------------------------------
@@ -94,21 +140,31 @@ def compress_nm(w, n_sel: int = 2, m_group: int = 4) -> NMCompressed:
                         n_sel=n_sel, m_group=m_group)
 
 
+def _nm_builder(n_sel: int, m_group: int, bm: int, bn: int, bk: int,
+                interpret: bool):
+    return functools.partial(nm_spmm_pallas, n_sel=n_sel, m_group=m_group,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
 def nm_spmm(x: jax.Array, w: NMCompressed, bm: int = 128, bn: int = 128,
             bk: int = 128) -> jax.Array:
-    fn = functools.partial(nm_spmm_pallas, n_sel=w.n_sel, m_group=w.m_group,
-                           bm=bm, bn=bn, bk=bk, interpret=_interpret())
-    return jax.jit(fn)(x, w.values, w.indices)
+    fn = _jitted("nm", _nm_builder, w.n_sel, w.m_group, bm, bn, bk,
+                 _interpret())
+    return fn(x, w.values, w.indices)
 
 
 # ---------------------------------------------------------------------------
 # Flash attention
 # ---------------------------------------------------------------------------
 
+def _flash_builder(causal: bool, bq: int, bk: int, interpret: bool):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return functools.partial(flash_attention_pallas, causal=causal,
+                             bq=bq, bk=bk, interpret=interpret)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, bq: int = 128, bk: int = 128
                     ) -> jax.Array:
-    from repro.kernels.flash_attention import flash_attention_pallas
-    fn = functools.partial(flash_attention_pallas, causal=causal,
-                           bq=bq, bk=bk, interpret=_interpret())
-    return jax.jit(fn)(q, k, v)
+    fn = _jitted("flash", _flash_builder, causal, bq, bk, _interpret())
+    return fn(q, k, v)

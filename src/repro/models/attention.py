@@ -154,19 +154,19 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
     ``kv_override`` supplies external K/V inputs (cross-attention)."""
     b, s, _ = x.shape
     nh, nk, hd = L.eff_heads(cfg.n_heads), cfg.n_kv_heads, cfg.head_dim
-    q = jnp.einsum("btd,de->bte", x, p["wq"].astype(COMPUTE_DTYPE))
+    q = L.proj(x, p["wq"], "attn.wq")
     q = q.reshape(b, s, nh, hd)
     if kv_override is None:
-        k = jnp.einsum("btd,de->bte", x, p["wk"].astype(COMPUTE_DTYPE))
-        v = jnp.einsum("btd,de->bte", x, p["wv"].astype(COMPUTE_DTYPE))
+        k = L.proj(x, p["wk"], "attn.wk")
+        v = L.proj(x, p["wv"], "attn.wv")
         k = k.reshape(b, s, nk, hd)
         v = v.reshape(b, s, nk, hd)
         k = apply_rope(k, positions, freqs)
     else:
         xkv = kv_override[0]
         skv = xkv.shape[1]
-        k = jnp.einsum("btd,de->bte", xkv, p["wk"].astype(COMPUTE_DTYPE))
-        v = jnp.einsum("btd,de->bte", xkv, p["wv"].astype(COMPUTE_DTYPE))
+        k = L.proj(xkv, p["wk"], "attn.wk")
+        v = L.proj(xkv, p["wv"], "attn.wv")
         k = k.reshape(b, skv, nk, hd)
         v = v.reshape(b, skv, nk, hd)
     q = apply_rope(q, positions, freqs)
@@ -176,7 +176,7 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
     k, v = _repeat_kv(k, rep), _repeat_kv(v, rep)
     o = chunked_attention(q, k, v, causal=causal, window=window)
     o = o.reshape(b, s, nh * hd)
-    return jnp.einsum("bte,ed->btd", o, p["wo"].astype(COMPUTE_DTYPE))
+    return L.proj(o, p["wo"], "attn.wo")
 
 
 def attention_decode_block(x: jax.Array, p: dict, cfg: ModelConfig,
@@ -192,9 +192,9 @@ def attention_decode_block(x: jax.Array, p: dict, cfg: ModelConfig,
     """
     b, _ = x.shape
     nh, nk, hd = L.eff_heads(cfg.n_heads), cfg.n_kv_heads, cfg.head_dim
-    q = jnp.einsum("bd,de->be", x, p["wq"].astype(COMPUTE_DTYPE))
-    k = jnp.einsum("bd,de->be", x, p["wk"].astype(COMPUTE_DTYPE))
-    v = jnp.einsum("bd,de->be", x, p["wv"].astype(COMPUTE_DTYPE))
+    q = L.proj(x, p["wq"], "attn.wq")
+    k = L.proj(x, p["wk"], "attn.wk")
+    v = L.proj(x, p["wv"], "attn.wv")
     pos1 = jnp.reshape(pos, (1,))
     q = apply_rope(q.reshape(b, 1, nh, hd), pos1, freqs).reshape(b, nh, hd)
     k = apply_rope(k.reshape(b, 1, nk, hd), pos1, freqs).reshape(b, nk, hd)
@@ -220,5 +220,5 @@ def attention_decode_block(x: jax.Array, p: dict, cfg: ModelConfig,
         o = decode_attention(q, _repeat_kv(k_cache, rep),
                              _repeat_kv(v_cache, rep), length)
     o = o.reshape(b, nh * hd)
-    out = jnp.einsum("be,ed->bd", o, p["wo"].astype(COMPUTE_DTYPE))
+    out = L.proj(o, p["wo"], "attn.wo")
     return out, k_cache, v_cache

@@ -33,6 +33,37 @@ COMPUTE_DTYPE = jnp.bfloat16
 PARAM_DTYPE = jnp.float32
 
 
+# ---------------------------------------------------------------------------
+# Projection dispatch hook (execution plane)
+# ---------------------------------------------------------------------------
+# Every FFN/attention projection matmul routes through :func:`proj`.  With no
+# hook installed this is exactly the dense einsum the layers always ran; the
+# exec plane (repro.exec.dispatch) installs a hook that swaps individual
+# (layer, role) projections for compressed Pallas kernels per its ExecPlan.
+
+_PROJ_HOOK = None
+
+
+def set_proj_hook(fn) -> None:
+    """Install (or clear, with ``None``) the projection override.
+
+    ``fn(x, w, role) -> Optional[jax.Array]``: return the projection output
+    (same leading dims as ``x``, trailing dim from ``w``) to take over the
+    matmul, or ``None`` to fall through to the dense einsum."""
+    global _PROJ_HOOK
+    _PROJ_HOOK = fn
+
+
+def proj(x: jax.Array, w: jax.Array, role: str) -> jax.Array:
+    """``x @ w`` over the last axis of ``x`` (the layers' projection shape:
+    w is (d_in, d_out)), dispatchable per ``role``."""
+    if _PROJ_HOOK is not None:
+        y = _PROJ_HOOK(x, w, role)
+        if y is not None:
+            return y
+    return jnp.einsum("...d,df->...f", x, w.astype(COMPUTE_DTYPE))
+
+
 def _init(key, shape, scale_axis: int = 0, dtype=PARAM_DTYPE):
     fan_in = shape[scale_axis]
     return jax.random.normal(key, shape, dtype) / math.sqrt(max(fan_in, 1))
@@ -136,11 +167,11 @@ def mlp_params(key, cfg: ModelConfig) -> dict:
 
 
 def mlp(x: jax.Array, p: dict) -> jax.Array:
-    g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(COMPUTE_DTYPE))
-    u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(COMPUTE_DTYPE))
+    g = proj(x, p["w_gate"], "ffn.w_gate")
+    u = proj(x, p["w_up"], "ffn.w_up")
     h = jax.nn.silu(g) * u
     h = shard(h, "batch", None, "model")
-    return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(COMPUTE_DTYPE))
+    return proj(h, p["w_down"], "ffn.w_down")
 
 
 def attn_params(key, cfg: ModelConfig) -> dict:

@@ -13,6 +13,14 @@ Design rules:
 
 The public surface is :class:`Model` (init / loss / prefill / decode_step /
 init_cache) + :func:`input_specs`.
+
+Execution-plane integration: every FFN/attention projection einsum routes
+through :func:`repro.models.layers.proj` (a per-role dispatch point).  The
+dense model runs it hook-free; :class:`repro.exec.dispatch.CompressedModel`
+installs a hook and re-drives the SAME layer bodies (:func:`_attn_layer`)
+in a per-layer loop — compressed operands differ per layer, so the stacked
+``lax.scan`` cannot carry them — swapping planned projections for the
+Pallas sparse kernels.
 """
 
 from __future__ import annotations

@@ -30,15 +30,24 @@ def test_run_quick_smoke(capsys, tmp_path):
     assert "stepwise_batch_search" in out
     assert "tableI_fixed_avg" in out
     assert "dimo_batch_avg" in out
+    # execution plane: compressed-vs-dense ratio rows for two kernel-backed
+    # sparsity patterns + the measured-vs-predicted calibration fits
+    assert "exec_ratio_block50" in out
+    assert "exec_ratio_nm24" in out
+    assert "exec_calibration_block50" in out
+    assert "exec_calibration_iid50" in out
     # cache effectiveness is surfaced
     assert "memo_stats_" in out
+    assert "memo_stats_fetch_table" in out
     # --json mirrors every CSV row plus per-suite wall-clocks
     doc = json.loads(json_path.read_text())
     assert doc["failures"] == 0 and doc["quick"] is True
     names = [r["name"] for r in doc["rows"]]
     for expected in ("fig11_avg_saving", "engine_avg", "evaluator_avg",
                      "stepwise_batch_search", "tableI_fixed_avg",
-                     "dimo_batch_avg"):
+                     "dimo_batch_avg", "exec_ratio_block50",
+                     "exec_ratio_nm24", "exec_calibration_block50",
+                     "memo_stats_fetch_table"):
         assert expected in names
     for row in doc["rows"]:
         assert set(row) == {"name", "us_per_call", "derived"}
