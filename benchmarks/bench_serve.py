@@ -1,0 +1,160 @@
+"""Serving-plane benchmark: batched prefill + KV-cache decode throughput,
+compressed (scan-compiled Pallas kernels) vs dense, per batch size.
+
+Rows (us_per_call = warm wall-clock of the phase):
+
+  * ``serve_prefill_{dense|comp}_b{B}`` — one batched prefill pass
+    (``Model.prefill`` / ``CompressedModel.prefill``, jitted, warm);
+    derived: tokens/sec and tokens/sec/device.
+  * ``serve_decode_{dense|comp}_b{B}``  — one greedy decode step against
+    the prefill-filled cache (jitted, warm); derived: tokens/sec(/device).
+    Compressed rows also surface the plan's :class:`FallbackReason` counts
+    and the kernel jit-cache stats (hits/misses/entries) — the whole
+    serving trace should cost one kernel build per planned role, NOT
+    ``n_layers ×`` that.
+  * ``serve_scan_vs_unrolled``          — the tentpole comparison: the
+    scanned compressed forward (one compiled block, HLO O(1) in depth)
+    vs the previous revision's per-layer Python re-drive, first-call
+    (trace + compile) and warm.
+
+Dense rows serve the SAME pruned weight tree the compressed store was
+built from, so the comparison isolates the execution path.  With more
+than one device, the request batch shards over a ``make_serve_mesh`` data
+axis and throughput is reported per device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _serve_times(model, params, prompts, gen: int, max_len: int):
+    """(warm prefill seconds, warm per-decode-step seconds)."""
+    import jax.numpy as jnp
+
+    b, plen = prompts.shape
+    prefill = jax.jit(functools.partial(model.prefill, max_len=max_len))
+    step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    logits, cache = prefill(params, prompts)        # warm (trace/compile)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    logits, cache = step(params, cache, tok,        # warm the decode step
+                         jnp.asarray(plen, jnp.int32))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t1 = time.perf_counter()
+    for t in range(plen + 1, plen + 1 + gen):
+        logits, cache = step(params, cache, tok, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_step = (time.perf_counter() - t1) / gen
+    return t_prefill, t_step
+
+
+def _first_and_warm(fn, *args):
+    """(first-call seconds — trace + compile —, warm-call seconds)."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    t_first = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return t_first, time.perf_counter() - t1
+
+
+def run(quick: bool = False) -> None:
+    import jax.numpy as jnp
+
+    from repro import exec as rexec
+    from repro.configs import get_config
+    from repro.core.cosearch import CoSearchConfig
+    from repro.core.engine import EngineConfig
+    from repro.core.sparsity import BlockBernoulli
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import (axis_map_for, make_serve_mesh,
+                                   mesh_axis_sizes)
+    from repro.models.sharding import logical_axis_rules
+    from repro.models.transformer import Model
+
+    cfg = get_config("chatglm3-6b").reduced()
+    if not quick:
+        # deepen the stack so the scan-vs-unrolled trace gap is visible
+        cfg = dataclasses.replace(cfg, n_layers=8)
+    batches = (1, 2) if quick else (1, 8, 64)
+    plen, gen = (8, 4) if quick else (32, 16)
+    fast = CoSearchConfig(objective="edp",
+                          engine=EngineConfig(max_levels=2,
+                                              max_allocs_per_pattern=16),
+                          spatial_top=2, max_pairs=6)
+
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = rexec.build_exec_plan(cfg, BlockBernoulli(0.5, 32 * 32),
+                                 tokens=plen * max(batches),
+                                 search_cfg=fast, value_bits=32)
+    pruned = rexec.prune_params(params, plan, cfg)
+    store = rexec.compress_params(pruned, plan, cfg)
+    cm = rexec.CompressedModel(model, store)
+    fb = plan.fallback_counts()
+    rng = np.random.default_rng(0)
+
+    kops.clear_kernel_cache()
+    for b in batches:
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (b, plen)),
+                              jnp.int32)
+        mesh = make_serve_mesh(b)
+        ndev = int(np.prod(list(mesh_axis_sizes(mesh).values()))) \
+            if mesh is not None else 1
+        ctx = contextlib.nullcontext() if mesh is None else mesh
+        rules = contextlib.nullcontext() if mesh is None \
+            else logical_axis_rules(axis_map_for(mesh))
+        with ctx, rules:
+            for label, m in (("dense", model), ("comp", cm)):
+                t_prefill, t_step = _serve_times(m, pruned, prompts, gen,
+                                                 plen + gen + 1)
+                extra = ""
+                if label == "comp":
+                    kc = kops.kernel_cache_stats()
+                    extra = (f" ratio={store.achieved_ratio():.3f}"
+                             f" fallbacks={fb or 'none'}"
+                             f" kcache=h{kc['hits']}/m{kc['misses']}"
+                             f"/e{kc['entries']}")
+                emit(f"serve_prefill_{label}_b{b}", t_prefill * 1e6,
+                     f"tok/s={b * plen / t_prefill:.0f} "
+                     f"tok/s/dev={b * plen / t_prefill / ndev:.0f} "
+                     f"plen={plen} ndev={ndev}{extra}")
+                emit(f"serve_decode_{label}_b{b}", t_step * 1e6,
+                     f"tok/s={b / t_step:.0f} "
+                     f"tok/s/dev={b / t_step / ndev:.0f} "
+                     f"gen={gen} ndev={ndev}{extra}")
+
+    # tentpole row: scanned compressed forward vs per-layer unrolled
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, plen)), jnp.int32)
+    scan_first, scan_warm = _first_and_warm(
+        jax.jit(cm.hidden_states), pruned, tokens)
+    unr_first, unr_warm = _first_and_warm(
+        jax.jit(cm.hidden_states_unrolled), pruned, tokens)
+    emit("serve_scan_vs_unrolled", scan_warm * 1e6,
+         f"scan_trace_ms={scan_first * 1e3:.0f} "
+         f"unrolled_trace_ms={unr_first * 1e3:.0f} "
+         f"unrolled_warm_us={unr_warm * 1e6:.0f} layers={cfg.n_layers} "
+         f"speedup_trace={unr_first / scan_first:.2f}x "
+         f"speedup_warm={unr_warm / scan_warm:.2f}x")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -34,8 +34,8 @@ def main(argv=None) -> int:
     from benchmarks import (bench_dimo, bench_energy_validation, bench_exec,
                             bench_fig5_payload, bench_fig6_penalty,
                             bench_format_opt, bench_formats_feasibility,
-                            bench_kernels, bench_multimodel, bench_speed,
-                            common)
+                            bench_kernels, bench_multimodel, bench_serve,
+                            bench_speed, common)
     suites = [
         ("fig5", bench_fig5_payload.run),
         ("fig6", bench_fig6_penalty.run),
@@ -47,6 +47,7 @@ def main(argv=None) -> int:
         ("feasibility", bench_formats_feasibility.run),
         ("kernels", bench_kernels.run),
         ("exec", bench_exec.run),
+        ("serve", bench_serve.run),
     ]
     argv = list(sys.argv[1:] if argv is None else argv)
     quick = "--quick" in argv

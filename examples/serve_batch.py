@@ -1,5 +1,7 @@
-"""Batched serving of a reduced MoE model: prompt ingestion + greedy decode
-with KV caches, throughput reported per phase.
+"""Batched serving of a reduced MoE model: one-pass batched prefill +
+KV-cache greedy decode, dense AND compressed (the exec plane's
+CompressedModel.generate drives the same launch.serve.generate path), with
+per-phase throughput.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -9,11 +11,14 @@ import sys
 
 
 def main() -> None:
-    cmd = [sys.executable, "-m", "repro.launch.serve",
-           "--arch", "granite-moe-3b-a800m", "--reduced",
-           "--batch", "4", "--prompt-len", "32", "--gen", "16"]
-    print("+", " ".join(cmd))
-    raise SystemExit(subprocess.call(cmd))
+    base = [sys.executable, "-m", "repro.launch.serve",
+            "--arch", "granite-moe-3b-a800m", "--reduced",
+            "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    for cmd in (base, base + ["--compressed"]):
+        print("+", " ".join(cmd))
+        rc = subprocess.call(cmd)
+        if rc:
+            raise SystemExit(rc)
 
 
 if __name__ == "__main__":

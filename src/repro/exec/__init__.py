@@ -12,14 +12,16 @@
 
 from repro.exec.plans import (ExecPlan, FallbackReason, KernelChoice, OpPlan,
                               build_exec_plan, model_workload)
-from repro.exec.compress import CompressedStore, compress_params, prune_params
+from repro.exec.compress import (CompressedStore, StackedStore,
+                                 compress_params, prune_params, stack_store)
 from repro.exec.dispatch import CompressedModel, OpCounters, instrument
 from repro.exec.calibrate import CalibrationReport, calibrate
 
 __all__ = [
     "ExecPlan", "FallbackReason", "KernelChoice", "OpPlan",
     "build_exec_plan", "model_workload",
-    "CompressedStore", "compress_params", "prune_params",
+    "CompressedStore", "StackedStore", "compress_params", "prune_params",
+    "stack_store",
     "CompressedModel", "OpCounters", "instrument",
     "CalibrationReport", "calibrate",
 ]

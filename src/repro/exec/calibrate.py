@@ -17,6 +17,13 @@ DRAM energy coefficient (the per-bit cost the search actually ranks
 designs by); a model-aware spec (``BlockBernoulli``) makes the fit scale
 ≈ 1 and the residuals collapse — both paths are exercised in
 ``benchmarks/bench_exec.py``.
+
+Counter provenance: :func:`~repro.exec.dispatch.instrument` records at
+TRACE time.  The scan-compiled serving path dispatches each role once per
+trace with layer-summed totals (``calls += n_layers``), so the per-call
+means compared here (``w_fetch_bits_per_call`` vs per-layer
+``predicted_w_fetch_bits``) are identical between the scanned and the
+unrolled forwards — the fit is path-independent by construction.
 """
 
 from __future__ import annotations

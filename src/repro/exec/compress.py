@@ -12,6 +12,12 @@ Compression is lossless for weights that already carry the plan's sparsity
 structure (block-sparse for bitmap entries, N:M for nm entries);
 :func:`prune_params` produces such weights from a dense pytree.  MoE roles
 fan out per expert (one entry per (layer, role, expert)).
+
+:func:`stack_store` re-lays a per-layer store as a **layer-stacked**
+:class:`StackedStore`: one pytree per role with a leading layer axis,
+padded so every scanned layer shares ONE kernel configuration per role —
+the representation ``jax.lax.scan`` carries through the compiled serving
+block (:class:`repro.exec.dispatch.CompressedModel` prefill/decode).
 """
 
 from __future__ import annotations
@@ -156,6 +162,155 @@ def compress_params(params: dict, plan: ExecPlan, cfg: ModelConfig
                     data=data, dense_bits=dense_bits,
                     stored_bits=_stored_bits(ch.kind, data, vb))
     return CompressedStore(plan, entries)
+
+
+# ---------------------------------------------------------------------------
+# Layer-stacked store (the scan-compiled serving representation)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StackedRole:
+    """One dispatch role's compressed weights for ALL layers, stacked.
+
+    ``data`` is a dict of arrays with a leading layer axis (``None`` for
+    dense-kind roles, which fall through to the dense einsum carried by the
+    params pytree itself).  Bitmap payloads are padded to the max non-zero
+    block count across layers, so every scanned layer slice has the same
+    shape and runs the same kernel grid (``t_max`` is the shared static
+    bound).  Accounting fields are totals over the layer axis: the EXACT
+    realized encoding (``stored_bits``) stays what the calibration loop
+    compares against; ``padded_bits`` is what the padded stacked payload
+    actually occupies (the price of shape uniformity)."""
+
+    role: str
+    kind: str                  # "bitmap" | "nm" | "dense"
+    n: int
+    k: int
+    data: Optional[dict]       # stacked arrays, leading axis = layer
+    # static kernel configuration (shared by every scanned layer)
+    bn: int = 0
+    bk: int = 0
+    t_max: int = 1
+    n_sel: int = 0
+    m_group: int = 0
+    # accounting — totals over all layers
+    dense_bits: float = 0.0
+    stored_bits: float = 0.0
+    padded_bits: float = 0.0
+    payload_elems: float = 0.0   # compressed operand elements, one full pass
+    decode_units: float = 0.0    # metadata units decoded, one full pass
+
+
+@dataclasses.dataclass
+class StackedStore:
+    """A :class:`CompressedStore` re-laid for ``jax.lax.scan``: per-role
+    pytrees with a leading layer axis + one static kernel config per role."""
+
+    plan: ExecPlan
+    n_layers: int
+    roles: dict[str, StackedRole]
+
+    def extras(self) -> dict[str, dict]:
+        """The scan-carried xs pytree: role → stacked arrays (kernel-backed
+        roles only; dense roles ride in the params pytree)."""
+        return {r: sr.data for r, sr in self.roles.items()
+                if sr.data is not None}
+
+    def padding_overhead(self) -> float:
+        """padded/stored bits over the kernel-backed roles (≥ 1)."""
+        stored = sum(sr.stored_bits for sr in self.roles.values()
+                     if sr.data is not None)
+        padded = sum(sr.padded_bits for sr in self.roles.values()
+                     if sr.data is not None)
+        return padded / stored if stored else 1.0
+
+
+def _stack_bitmap(role: str, entries: list[CompressedTensor]) -> StackedRole:
+    ds = [e.data for e in entries]
+    bn, bk = ds[0].bn, ds[0].bk
+    n, k = ds[0].n, ds[0].k
+    vb = ds[0].blocks.dtype.itemsize * 8
+    pad_to = max(max(int(d.blocks.shape[0]) for d in ds), 1)
+    blocks, rows = [], []
+    for d in ds:
+        nnzb = int(d.blocks.shape[0])
+        b = np.zeros((pad_to, bn, bk), np.asarray(d.blocks).dtype)
+        r = np.zeros((pad_to,), np.int32)
+        if nnzb:
+            b[:nnzb] = np.asarray(d.blocks)
+            r[:nnzb] = np.asarray(d.row_ids)
+        blocks.append(b)
+        rows.append(r)
+    total_nnzb = sum(int(np.asarray(d.counts).sum()) for d in ds)
+    stored = sum(e.stored_bits for e in entries)
+    return StackedRole(
+        role=role, kind="bitmap", n=n, k=k,
+        data={"blocks": jnp.asarray(np.stack(blocks)),
+              "row_ids": jnp.asarray(np.stack(rows)),
+              "counts": jnp.stack([d.counts for d in ds]),
+              "offsets": jnp.stack([d.offsets for d in ds])},
+        bn=bn, bk=bk,
+        t_max=max(max(d.max_per_col for d in ds), 1),
+        dense_bits=sum(e.dense_bits for e in entries),
+        stored_bits=stored,
+        padded_bits=stored + (len(ds) * pad_to - total_nnzb) * bn * bk * vb,
+        payload_elems=float(total_nnzb * bn * bk),
+        decode_units=float(total_nnzb))
+
+
+def _stack_nm(role: str, entries: list[CompressedTensor]) -> StackedRole:
+    ds = [e.data for e in entries]
+    stored = sum(e.stored_bits for e in entries)
+    return StackedRole(
+        role=role, kind="nm", n=ds[0].n, k=ds[0].k,
+        data={"values": jnp.stack([d.values for d in ds]),
+              "indices": jnp.stack([d.indices for d in ds])},
+        n_sel=ds[0].n_sel, m_group=ds[0].m_group,
+        dense_bits=sum(e.dense_bits for e in entries),
+        stored_bits=stored, padded_bits=stored,
+        payload_elems=float(sum(d.values.size for d in ds)),
+        decode_units=float(sum(d.indices.size for d in ds)))
+
+
+def _stack_dense(role: str, entries: list[CompressedTensor]) -> StackedRole:
+    d0 = entries[0].data
+    stored = sum(e.stored_bits for e in entries)
+    return StackedRole(
+        role=role, kind="dense", n=d0.shape[0], k=d0.shape[1], data=None,
+        dense_bits=sum(e.dense_bits for e in entries),
+        stored_bits=stored, padded_bits=stored,
+        payload_elems=float(sum(e.data.size for e in entries)),
+        decode_units=0.0)
+
+
+def stack_store(store: CompressedStore) -> StackedStore:
+    """Re-lay ``store`` with a leading layer axis per role.
+
+    Only non-expert entries stack (MoE expert matmuls execute dense inside
+    the MoE block and their plan entries are accounting-only, exactly as in
+    the per-layer store).  Bitmap payloads pad to the across-layers max
+    non-zero block count; padded blocks are zeros with row id 0 and sit
+    beyond every column's ``counts``, so the kernel never accumulates them
+    — results are bit-identical to the per-layer dispatch."""
+    n_layers = store.plan.n_layers
+    by_role: dict[str, list[CompressedTensor]] = {}
+    for e in store:
+        if e.expert >= 0:
+            continue
+        by_role.setdefault(e.role, []).append(e)
+    roles: dict[str, StackedRole] = {}
+    for role, entries in by_role.items():
+        entries.sort(key=lambda e: e.layer)
+        if len(entries) != n_layers:
+            raise ValueError(f"role {role!r} has {len(entries)} entries for "
+                             f"{n_layers} layers")
+        kind = entries[0].kind
+        if any(e.kind != kind for e in entries):
+            raise ValueError(f"role {role!r} mixes kinds across layers")
+        stack = {"bitmap": _stack_bitmap, "nm": _stack_nm,
+                 "dense": _stack_dense}[kind]
+        roles[role] = stack(role, entries)
+    return StackedStore(plan=store.plan, n_layers=n_layers, roles=roles)
 
 
 def prune_params(params: dict, plan: ExecPlan, cfg: ModelConfig) -> dict:

@@ -2,24 +2,35 @@
 
 The transformer's FFN/attention projections all route through
 :func:`repro.models.layers.proj`.  :class:`CompressedModel` installs a hook
-there and walks the layer stack in a per-layer Python loop (compressed
-operands differ per layer, so the stacked ``lax.scan`` cannot carry them),
-swapping each planned (layer, role) projection for the matching Pallas
-kernel — ``bitmap_spmm`` / ``nm_spmm``, interpret mode on CPU, native on
-TPU — while dense-kind roles fall through to the exact einsum the dense
-model runs.  Because the surrounding forward IS the dense model's code
-path (:func:`repro.models.transformer._attn_layer` per layer), compressed
-and dense forwards differ only by kernel accumulation order.
+there and drives the model's OWN scanned layer stack with an ``extras``
+pytree — the :class:`~repro.exec.compress.StackedStore`'s layer-stacked
+compressed payloads ride ``lax.scan``'s xs, the scan body publishes each
+layer's slice through :func:`repro.models.layers.layer_ctx`, and the hook
+resolves it into the matching Pallas kernel call (``bitmap_spmm`` /
+``nm_spmm``, interpret mode on CPU, native on TPU).  Dense-kind roles fall
+through to the exact einsum the dense model runs.  Because the compiled
+graph is the dense model's one scanned block (HLO O(1) in depth) and padded
+payload blocks sit beyond every column's ``counts``, compressed and dense
+forwards differ only by kernel accumulation order — and the scanned and
+unrolled compressed forwards are bit-identical.
 
-Kernel wrappers are jit-cached per static configuration
-(:func:`repro.kernels.ops` ``_jitted``), so repeated layers that share a
-block shape reuse one compiled kernel.
+The per-layer Python re-drive from the previous revision survives as
+:meth:`CompressedModel.hidden_states_unrolled` (equivalence tests, the
+scan-vs-unrolled benchmark).  Kernel wrappers are jit-cached per static
+configuration (:func:`repro.kernels.ops` ``_jitted``); the stacked path
+keys that cache on the SHARED across-layers configuration per role, so a
+whole serving trace costs ``len(plan.ops)`` kernel builds, not
+``n_layers ×`` that.
 
-:func:`instrument` turns on per-role traffic counters: every dispatched
-matmul records the EXACT bits its operands move (realized payload +
-metadata of the compressed store, not the statistical expectation) plus
-MACs and decode operations — the measured half of the calibration loop
-(:mod:`repro.exec.calibrate`).
+Counter semantics under jit/scan (:func:`instrument`): the hook runs at
+TRACE time, once per (role) per traced scan body — so one scanned forward
+records each role ONCE, with totals covering all ``n_layers`` layers
+(``calls += n_layers``, bits/MACs/decode-ops summed over the layer axis
+from host-side stacked accounting).  Per-layer means (``calls``,
+``w_fetch_bits_per_call``) therefore match the unrolled per-layer loop
+exactly, and :mod:`repro.exec.calibrate` fits the same coefficients on
+either path.  Re-running a jitted function does NOT re-record (no retrace);
+wrap the traced call in a fresh ``instrument()`` block per measurement.
 """
 
 from __future__ import annotations
@@ -32,7 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.exec.compress import CompressedStore, CompressedTensor
+from repro.exec.compress import (CompressedStore, CompressedTensor,
+                                 StackedStore, stack_store)
 from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -64,7 +76,13 @@ _ACTIVE_COUNTERS: Optional[dict[str, OpCounters]] = None
 @contextlib.contextmanager
 def instrument() -> Iterator[dict[str, OpCounters]]:
     """Collect per-role :class:`OpCounters` for every dispatched projection
-    executed inside the context (nested dispatchers share the dict)."""
+    TRACED inside the context (nested dispatchers share the dict).
+
+    Tracing is the recording event: the unrolled path records once per
+    (layer, role); the scanned path records once per role with
+    ``calls += n_layers`` and layer-summed totals, so per-call means agree.
+    A jit cache hit replays without recording — time a jitted forward by
+    tracing it inside the block (or clearing jax's cache first)."""
     global _ACTIVE_COUNTERS
     prev = _ACTIVE_COUNTERS
     counters: dict[str, OpCounters] = {}
@@ -76,14 +94,19 @@ def instrument() -> Iterator[dict[str, OpCounters]]:
 
 
 def _record(role: str, x2: jax.Array, y_k: int,
-            w_bits: float, macs: float, decode_ops: float) -> None:
+            w_bits: float, macs: float, decode_ops: float,
+            layers: int = 1) -> None:
+    """Record one dispatch covering ``layers`` realized layer matmuls.
+
+    ``w_bits``/``macs``/``decode_ops`` are totals over those layers; x/y
+    activation traffic is per-layer and scaled here."""
     if _ACTIVE_COUNTERS is None:
         return
     c = _ACTIVE_COUNTERS.setdefault(role, OpCounters())
-    c.calls += 1
+    c.calls += layers
     c.w_fetch_bits += w_bits
-    c.x_bits += float(x2.size * x2.dtype.itemsize * 8)
-    c.y_bits += float(x2.shape[0] * y_k * 32)        # kernels emit float32
+    c.x_bits += float(layers * x2.size * x2.dtype.itemsize * 8)
+    c.y_bits += float(layers * x2.shape[0] * y_k * 32)   # kernels emit f32
     c.macs += macs
     c.decode_ops += decode_ops
 
@@ -94,7 +117,7 @@ def measured_w_bits(entry: CompressedTensor) -> float:
 
 
 # ---------------------------------------------------------------------------
-# The dispatcher (repro.models.layers.proj hook)
+# The dispatchers (repro.models.layers.proj hooks)
 # ---------------------------------------------------------------------------
 
 def _tile(extent: int, cap: int = 128, multiple: int = 1) -> int:
@@ -107,11 +130,20 @@ def _tile(extent: int, cap: int = 128, multiple: int = 1) -> int:
 
 
 class _Dispatcher:
-    """The installed ``proj`` hook: per-(layer, role) kernel dispatch."""
+    """Per-(layer, role) hook for the UNROLLED reference forward.
+
+    Bitmap kernels use one per-role ``t_max`` (max over layers), so every
+    layer of a role shares a single jitted kernel configuration — same
+    cache-sharing property the stacked path gets by construction."""
 
     def __init__(self, store: CompressedStore):
         self.store = store
         self.layer = 0
+        self._t_max: dict[str, int] = {}
+        for e in store:
+            if e.kind == "bitmap" and e.expert < 0:
+                self._t_max[e.role] = max(self._t_max.get(e.role, 1),
+                                          e.data.max_per_col)
 
     def __call__(self, x: jax.Array, w: jax.Array, role: str
                  ) -> Optional[jax.Array]:
@@ -127,7 +159,8 @@ class _Dispatcher:
             _record(role, x2, d.k, w_bits=entry.stored_bits,
                     macs=float(m) * nnzb * d.bn * d.bk,
                     decode_ops=float(nnzb))
-            y = kops.bitmap_spmm(x2, d, bm=_tile(m))
+            y = kops.bitmap_spmm(x2, d, bm=_tile(m),
+                                 t_max=self._t_max[role])
         elif entry.kind == "nm":
             d = entry.data
             _record(role, x2, d.k, w_bits=entry.stored_bits,
@@ -145,9 +178,58 @@ class _Dispatcher:
         return y.astype(x.dtype).reshape(*lead, y.shape[-1])
 
 
+class _StackedDispatcher:
+    """Hook for the SCANNED forward: static kernel configuration from the
+    :class:`StackedStore`, per-layer operands from the scan body's
+    ``layer_ctx`` slice.  Runs once per role per trace; the compiled scan
+    replays it for every layer with that layer's payload slice."""
+
+    def __init__(self, stacked: StackedStore):
+        self.stacked = stacked
+
+    def __call__(self, x: jax.Array, w: jax.Array, role: str
+                 ) -> Optional[jax.Array]:
+        sr = self.stacked.roles.get(role)
+        if sr is None:
+            return None                       # unplanned role: dense einsum
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        m = x2.shape[0]
+        nl = self.stacked.n_layers
+        if sr.kind == "dense":
+            _record(role, x2, w.shape[-1], w_bits=sr.stored_bits,
+                    macs=float(m) * sr.payload_elems, decode_ops=0.0,
+                    layers=nl)
+            return None
+        e = L.current_layer_ctx()
+        if e is None or role not in e:
+            return None       # hook active outside a carrying scan: dense
+        d = e[role]
+        if sr.kind == "bitmap":
+            bc = kops.BitmapCompressed(
+                blocks=d["blocks"], counts=d["counts"],
+                row_ids=d["row_ids"], offsets=d["offsets"],
+                n=sr.n, k=sr.k, bn=sr.bn, bk=sr.bk, max_per_col=sr.t_max)
+            _record(role, x2, sr.k, w_bits=sr.stored_bits,
+                    macs=float(m) * sr.payload_elems,
+                    decode_ops=sr.decode_units, layers=nl)
+            y = kops.bitmap_spmm(x2, bc, bm=_tile(m), t_max=sr.t_max)
+        else:                                 # nm
+            nc = kops.NMCompressed(
+                values=d["values"], indices=d["indices"],
+                n=sr.n, k=sr.k, n_sel=sr.n_sel, m_group=sr.m_group)
+            _record(role, x2, sr.k, w_bits=sr.stored_bits,
+                    macs=float(m) * sr.payload_elems,
+                    decode_ops=sr.decode_units, layers=nl)
+            y = kops.nm_spmm(x2, nc, bm=_tile(m),
+                             bn=_tile(sr.n, multiple=sr.m_group),
+                             bk=_tile(sr.k))
+        return y.astype(x.dtype).reshape(*lead, y.shape[-1])
+
+
 @contextlib.contextmanager
 def active(store: CompressedStore) -> Iterator[_Dispatcher]:
-    """Install the dispatch hook for ``store`` on the model layers."""
+    """Install the per-layer dispatch hook for ``store`` (unrolled path)."""
     disp = _Dispatcher(store)
     L.set_proj_hook(disp)
     try:
@@ -156,8 +238,19 @@ def active(store: CompressedStore) -> Iterator[_Dispatcher]:
         L.set_proj_hook(None)
 
 
+@contextlib.contextmanager
+def active_stacked(stacked: StackedStore) -> Iterator[_StackedDispatcher]:
+    """Install the scan-carried dispatch hook for ``stacked``."""
+    disp = _StackedDispatcher(stacked)
+    L.set_proj_hook(disp)
+    try:
+        yield disp
+    finally:
+        L.set_proj_hook(None)
+
+
 # ---------------------------------------------------------------------------
-# Compressed forward
+# Compressed forward / serving surface
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -165,16 +258,35 @@ class CompressedModel:
     """A served model: dense params for the un-planned pieces + a
     :class:`CompressedStore` for every planned projection.
 
-    Mirrors :meth:`repro.models.transformer.Model.hidden_states` for
-    uniform attention stacks, reusing the model's own layer body per layer
-    (the hook swaps the projections) — MoE FFNs currently execute dense
-    (their plan entries are accounting-only), matching the store's
-    ``kind="dense"`` fall-through."""
+    Mirrors :class:`repro.models.transformer.Model`'s serving surface
+    (``prefill`` / ``init_cache`` / ``decode_step`` / ``hidden_states``)
+    for uniform attention stacks, driving the model's OWN scanned bodies
+    with the layer-stacked store as scan extras — MoE expert matmuls
+    currently execute dense (their plan entries are accounting-only),
+    matching the store's ``kind="dense"`` fall-through."""
 
     model: T.Model
     store: CompressedStore
+    stacked: Optional[StackedStore] = None
 
+    def __post_init__(self):
+        if self.stacked is None:
+            self.stacked = stack_store(self.store)
+
+    @property
+    def cfg(self):
+        return self.model.cfg
+
+    # -- full-sequence forward ---------------------------------------------
     def hidden_states(self, params, tokens: jax.Array) -> jax.Array:
+        with active_stacked(self.stacked):
+            return self.model.hidden_states(params, tokens, remat=False,
+                                            extras=self.stacked.extras())
+
+    def hidden_states_unrolled(self, params, tokens: jax.Array) -> jax.Array:
+        """Previous-revision reference: per-layer Python loop re-driving the
+        layer body (O(layers) HLO).  Kept for scanned-vs-unrolled
+        equivalence tests and the bench_serve comparison row."""
         cfg = self.model.cfg
         b, s = tokens.shape
         x = L.embed(tokens, params["embed"])
@@ -192,3 +304,31 @@ class CompressedModel:
         x = self.hidden_states(params, tokens)
         return jnp.einsum("btd,vd->btv", x,
                           params["embed"].astype(L.COMPUTE_DTYPE))
+
+    # -- serving (prefill + KV-cache decode) --------------------------------
+    def prefill(self, params, tokens: jax.Array, max_len: int):
+        """Compressed full-sequence forward that fills a decode cache —
+        same contract as :meth:`repro.models.transformer.Model.prefill`."""
+        with active_stacked(self.stacked):
+            return self.model.prefill(params, tokens, max_len,
+                                      extras=self.stacked.extras())
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.model.init_cache(batch, max_len)
+
+    def decode_step(self, params, cache, tokens: jax.Array, pos: jax.Array):
+        """One compressed decode token for the whole batch — same contract
+        as :meth:`repro.models.transformer.Model.decode_step`."""
+        with active_stacked(self.stacked):
+            return self.model.decode_step(params, cache, tokens, pos,
+                                          extras=self.stacked.extras())
+
+    def generate(self, params, prompts: jax.Array, gen: int,
+                 max_len: Optional[int] = None):
+        """Greedy batched generation (shared driver with the dense model:
+        :func:`repro.launch.serve.generate`).  Returns
+        (tokens (B, gen), t_prefill_s, t_gen_s)."""
+        from repro.launch import serve
+        if max_len is None:
+            max_len = prompts.shape[1] + gen
+        return serve.generate(self, params, prompts, gen, max_len)

@@ -255,6 +255,14 @@ class ExecPlan:
         return {op.role: op.choice.fallback for op in self.ops
                 if op.choice.fallback is not None}
 
+    def fallback_counts(self) -> dict[str, int]:
+        """Fallback occurrences by reason code (for bench/serve reporting:
+        how many planned roles run dense, and why)."""
+        counts: dict[str, int] = {}
+        for fb in self.fallbacks().values():
+            counts[fb.code] = counts.get(fb.code, 0) + 1
+        return counts
+
     # -- JSON ---------------------------------------------------------------
     def to_dict(self) -> dict:
         # drop `search` BEFORE asdict: it is the largest object in the

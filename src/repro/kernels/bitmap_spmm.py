@@ -41,17 +41,25 @@ def _kernel(counts_ref, offs_ref, rows_ref, x_ref, w_ref, y_ref):
 
 def bitmap_spmm_pallas(x: jax.Array, blocks: jax.Array, counts: jax.Array,
                        row_ids: jax.Array, offsets: jax.Array,
-                       *, k: int, bm: int = 128, interpret: bool = False
-                       ) -> jax.Array:
+                       *, k: int, bm: int = 128, t_max: int | None = None,
+                       interpret: bool = False) -> jax.Array:
     """x: (M, N) dense; blocks: (nnzb, bn, bk) compressed payload;
     counts/offsets: (K/bk,) per-block-column metadata; row_ids: (nnzb,).
     Returns Y = X @ W_sparse, (M, K) float32.
+
+    ``t_max`` is the static innermost grid bound (the max non-zero blocks in
+    any block-column).  Pass it explicitly whenever ``counts`` may be a
+    tracer (jit / scan): the fallback inference must then assume ``nnzb``,
+    which walks EVERY stored block per block-column.  A padded layer-stacked
+    store passes one shared bound so every scanned layer runs the same grid.
     """
     m, n = x.shape
     nnzb, bn, bk = blocks.shape
     gk = k // bk
-    t_max = 1 if nnzb == 0 else int(counts.max()) if hasattr(counts, "max") \
-        and not isinstance(counts, jax.core.Tracer) else nnzb
+    if t_max is None:
+        t_max = 1 if nnzb == 0 else int(counts.max()) \
+            if hasattr(counts, "max") \
+            and not isinstance(counts, jax.core.Tracer) else nnzb
     # static grid bound: tightest statically-known T
     t_max = max(int(t_max), 1)
     bm = min(bm, m)

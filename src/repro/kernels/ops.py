@@ -102,15 +102,25 @@ def compress_bitmap(w, bn: int = 128, bk: int = 128) -> BitmapCompressed:
         max_per_col=int(counts.max()) if counts.size else 1)
 
 
-def _bitmap_builder(k: int, bm: int, interpret: bool):
-    return functools.partial(bitmap_spmm_pallas, k=k, bm=bm,
+def _bitmap_builder(k: int, bm: int, t_max: int, interpret: bool):
+    return functools.partial(bitmap_spmm_pallas, k=k, bm=bm, t_max=t_max,
                              interpret=interpret)
 
 
-def bitmap_spmm(x: jax.Array, w: BitmapCompressed, bm: int = 128
-                ) -> jax.Array:
-    """Y = X @ W_blocksparse; dispatches to the Pallas kernel."""
-    fn = _jitted("bitmap", _bitmap_builder, w.k, bm, _interpret())
+def bitmap_spmm(x: jax.Array, w: BitmapCompressed, bm: int = 128,
+                t_max: int | None = None) -> jax.Array:
+    """Y = X @ W_blocksparse; dispatches to the Pallas kernel.
+
+    ``t_max`` (default: ``w.max_per_col``) is part of the static cache key,
+    so the grid's innermost bound is always the statically-known tightest —
+    even under jit/scan, where ``counts`` is a tracer and the kernel's own
+    inference would have to assume every stored block.  A layer-stacked
+    store passes its shared across-layers bound here, which is what keys
+    the cache on the STACKED configuration instead of per-layer values."""
+    if t_max is None:
+        t_max = w.max_per_col
+    fn = _jitted("bitmap", _bitmap_builder, w.k, bm, max(int(t_max), 1),
+                 _interpret())
     return fn(x, w.blocks, w.counts, w.row_ids, w.offsets)
 
 

@@ -9,6 +9,7 @@ intra-pod on ICI.
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -43,5 +44,22 @@ def make_small_mesh(data: int = 1, model: int = 1) -> Optional[object]:
     """Tiny mesh for CPU smoke/integration runs (1 device → None)."""
     n = data * model
     if len(jax.devices()) < n:
+        return None
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(batch: int, model: int = 1) -> Optional[object]:
+    """Serving mesh for batch-of-requests traffic on whatever is available.
+
+    The data axis takes the largest divisor of ``batch`` that fits the
+    devices left after TP (requests shard evenly, no padding); returns
+    ``None`` when that degenerates to a single device — serving then runs
+    unsharded, the same no-op path the model zoo's annotations take
+    outside a mesh."""
+    avail = len(jax.devices())
+    if model < 1 or avail < model:
+        return None
+    data = math.gcd(max(batch, 1), avail // model)
+    if data * model <= 1:
         return None
     return jax.make_mesh((data, model), ("data", "model"))

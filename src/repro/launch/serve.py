@@ -1,40 +1,54 @@
-"""Batched serving driver: prompt ingestion + greedy generation against the
-decode caches, with per-phase throughput reporting.
+"""Batched serving driver: one-pass prefill + KV-cache greedy decode, for
+the dense :class:`~repro.models.transformer.Model` AND the execution
+plane's :class:`~repro.exec.dispatch.CompressedModel` (same surface), with
+per-phase tokens/sec(/device) reporting and optional mesh sharding.
+
+:func:`generate` prefers the batched ``prefill`` path (one compiled
+full-sequence forward fills the whole cache); families without it — ring
+windows, hybrid/SSM/encdec states — keep the exact token-by-token decode
+ingest.  With a mesh (``make_serve_mesh``), the request batch shards over
+the data axis and the model zoo's logical-axis annotations bind to it.
 
 CPU quickstart (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--compressed] [--mesh]
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import axis_map_for, make_serve_mesh, mesh_axis_sizes
+from repro.models.sharding import logical_axis_rules, named_sharding
 from repro.models.transformer import Model
 
 
-def generate(model: Model, params, prompts: jax.Array, gen: int,
-             max_len: int):
-    """Greedy decode for a batch of equal-length prompts.
-
-    Prompts are ingested token-by-token through the decode path (exact KV
-    semantics for every family, incl. ring buffers and SSM states)."""
+def _generate(model, params, prompts: jax.Array, gen: int, max_len: int):
     b, plen = prompts.shape
-    cache = model.init_cache(b, max_len)
     step = jax.jit(model.decode_step, donate_argnums=(1,))
 
     t0 = time.perf_counter()
-    logits = None
-    for t in range(plen):
-        logits, cache = step(params, cache, prompts[:, t],
-                             jnp.asarray(t, jnp.int32))
-    jax.block_until_ready(logits)
+    try:
+        prefill = jax.jit(functools.partial(model.prefill, max_len=max_len))
+        all_logits, cache = prefill(params, prompts)
+        logits = all_logits[:, -1]
+        jax.block_until_ready(logits)
+    except NotImplementedError:
+        # ring windows / hybrid / ssm / encdec: exact decode-path ingest
+        cache = model.init_cache(b, max_len)
+        logits = None
+        for t in range(plen):
+            logits, cache = step(params, cache, prompts[:, t],
+                                 jnp.asarray(t, jnp.int32))
+        jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
     out = []
@@ -49,6 +63,49 @@ def generate(model: Model, params, prompts: jax.Array, gen: int,
     return jnp.stack(out, axis=1), t_prefill, t_gen
 
 
+def generate(model, params, prompts: jax.Array, gen: int, max_len: int,
+             mesh=None):
+    """Greedy decode for a batch of equal-length prompts.
+
+    ``model`` is anything with the serving surface (``prefill`` /
+    ``init_cache`` / ``decode_step``): the dense Model or a
+    CompressedModel.  Returns (tokens (B, gen), t_prefill_s, t_gen_s).
+    With ``mesh``, requests shard over the data axis and the models'
+    logical-axis annotations bind for the whole prefill+decode scope."""
+    if mesh is None:
+        return _generate(model, params, prompts, gen, max_len)
+    with mesh, logical_axis_rules(axis_map_for(mesh)):
+        prompts = jax.device_put(prompts,
+                                 named_sharding(mesh, "batch", None))
+        return _generate(model, params, prompts, gen, max_len)
+
+
+def _fast_plan(cfg, tokens: int):
+    """A small-budget co-searched plan for CLI/demo serving."""
+    from repro.core.cosearch import CoSearchConfig
+    from repro.core.engine import EngineConfig
+    from repro.core.sparsity import BlockBernoulli
+    from repro.exec import build_exec_plan
+    scfg = CoSearchConfig(objective="edp",
+                          engine=EngineConfig(max_levels=2,
+                                              max_allocs_per_pattern=16),
+                          spatial_top=2, max_pairs=6)
+    return build_exec_plan(cfg, BlockBernoulli(0.5, 32 * 32),
+                           tokens=tokens, search_cfg=scfg, value_bits=32)
+
+
+def compressed_model(cfg, params, tokens: int = 64):
+    """Plan → prune → compress → :class:`CompressedModel` in one call
+    (shared by the CLI and the serving examples).  Returns
+    (compressed_model, pruned_params) — serve with the PRUNED tree."""
+    from repro.exec import (CompressedModel, compress_params, prune_params)
+    model = Model(cfg)
+    plan = _fast_plan(cfg, tokens)
+    pruned = prune_params(params, plan, cfg)
+    store = compress_params(pruned, plan, cfg)
+    return CompressedModel(model, store), pruned
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -56,6 +113,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--compressed", action="store_true",
+                    help="co-search a plan and serve the compressed store")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the request batch over available devices")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,19 +124,31 @@ def main() -> None:
         cfg = cfg.reduced()
     model = Model(cfg)
     params = model.init(jax.random.key(0))
+    label = cfg.name
+    if args.compressed:
+        model, params = compressed_model(cfg, params)
+        ratio = model.store.achieved_ratio()
+        fb = model.store.plan.fallback_counts()
+        label += f" [compressed: ratio={ratio:.3f} fallbacks={fb or 'none'}]"
+    mesh = make_serve_mesh(args.batch) if args.mesh else None
+    ndev = int(np.prod(list(mesh_axis_sizes(mesh).values()))) if mesh else 1
+
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
     toks, t_prefill, t_gen = generate(
-        model, params, prompts, args.gen, args.prompt_len + args.gen)
+        model, params, prompts, args.gen, args.prompt_len + args.gen,
+        mesh=mesh)
     n_pref = args.batch * args.prompt_len
     n_gen = args.batch * args.gen
-    print(f"[serve] {cfg.name}: batch={args.batch}")
-    print(f"  ingest  {n_pref} tok in {t_prefill:.2f}s "
-          f"({n_pref / t_prefill:.1f} tok/s)")
+    print(f"[serve] {label}: batch={args.batch} devices={ndev}")
+    print(f"  prefill {n_pref} tok in {t_prefill:.2f}s "
+          f"({n_pref / t_prefill:.1f} tok/s, "
+          f"{n_pref / t_prefill / ndev:.1f} tok/s/dev)")
     print(f"  decode  {n_gen} tok in {t_gen:.2f}s "
-          f"({n_gen / t_gen:.1f} tok/s)")
+          f"({n_gen / t_gen:.1f} tok/s, "
+          f"{n_gen / t_gen / ndev:.1f} tok/s/dev)")
     print(f"  sample out: {np.asarray(toks[0, :8])}")
 
 

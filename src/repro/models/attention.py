@@ -148,10 +148,13 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
                     freqs: Optional[jax.Array], positions: jax.Array,
                     causal: bool = True, window: int = 0,
                     kv_override: Optional[tuple[jax.Array, jax.Array]] = None,
-                    ) -> jax.Array:
+                    return_kv: bool = False):
     """Training/prefill attention over a full sequence.
 
-    ``kv_override`` supplies external K/V inputs (cross-attention)."""
+    ``kv_override`` supplies external K/V inputs (cross-attention).
+    ``return_kv=True`` additionally returns the pre-GQA-repeat (K, V) —
+    post-RoPE K, exactly what :func:`attention_decode_block` writes into
+    the decode cache — so prefill can fill the cache in one batched pass."""
     b, s, _ = x.shape
     nh, nk, hd = L.eff_heads(cfg.n_heads), cfg.n_kv_heads, cfg.head_dim
     q = L.proj(x, p["wq"], "attn.wq")
@@ -163,6 +166,7 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
         v = v.reshape(b, s, nk, hd)
         k = apply_rope(k, positions, freqs)
     else:
+        assert not return_kv, "return_kv only applies to self-attention"
         xkv = kv_override[0]
         skv = xkv.shape[1]
         k = L.proj(xkv, p["wk"], "attn.wk")
@@ -173,10 +177,13 @@ def attention_block(x: jax.Array, p: dict, cfg: ModelConfig,
     q = shard(q, "batch", None, "model", None)
     k = shard(k, "batch", None, "model", None)
     rep = nh // max(nk, 1)
-    k, v = _repeat_kv(k, rep), _repeat_kv(v, rep)
-    o = chunked_attention(q, k, v, causal=causal, window=window)
+    kr, vr = _repeat_kv(k, rep), _repeat_kv(v, rep)
+    o = chunked_attention(q, kr, vr, causal=causal, window=window)
     o = o.reshape(b, s, nh * hd)
-    return L.proj(o, p["wo"], "attn.wo")
+    out = L.proj(o, p["wo"], "attn.wo")
+    if return_kv:
+        return out, k, v
+    return out
 
 
 def attention_decode_block(x: jax.Array, p: dict, cfg: ModelConfig,

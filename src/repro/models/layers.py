@@ -8,8 +8,9 @@ essential for compiling 62-layer models on 512 host devices.
 
 from __future__ import annotations
 
+import contextlib
 import math
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +63,32 @@ def proj(x: jax.Array, w: jax.Array, role: str) -> jax.Array:
         if y is not None:
             return y
     return jnp.einsum("...d,df->...f", x, w.astype(COMPUTE_DTYPE))
+
+
+# The hook's per-layer operand channel.  The transformer's scan runners
+# thread an optional ``extras`` pytree (leading layer axis) through
+# ``lax.scan`` and install each layer's SLICE here around the layer body,
+# so a hook can resolve layer-varying operands (compressed weights) while
+# the compiled graph stays one scanned block.  Trace-time state only.
+
+_LAYER_CTX: Any = None
+
+
+@contextlib.contextmanager
+def layer_ctx(value: Any):
+    """Install the current layer's extras slice for the proj hook."""
+    global _LAYER_CTX
+    prev = _LAYER_CTX
+    _LAYER_CTX = value
+    try:
+        yield
+    finally:
+        _LAYER_CTX = prev
+
+
+def current_layer_ctx() -> Any:
+    """The per-layer extras slice the enclosing scan body installed."""
+    return _LAYER_CTX
 
 
 def _init(key, shape, scale_axis: int = 0, dtype=PARAM_DTYPE):

@@ -50,3 +50,10 @@ def spec(*logical_axes: Optional[str]) -> P:
     in/out shardings).  Without rules, fully replicated."""
     amap = _axis_map() or {}
     return P(*[amap.get(a) if a is not None else None for a in logical_axes])
+
+
+def named_sharding(mesh, *logical_axes: Optional[str]):
+    """A NamedSharding on ``mesh`` from logical names under the current
+    rules — for placing INPUTS (e.g. a serving batch on the data axis)
+    rather than constraining intermediates."""
+    return jax.sharding.NamedSharding(mesh, spec(*logical_axes))

@@ -17,10 +17,11 @@ init_cache) + :func:`input_specs`.
 Execution-plane integration: every FFN/attention projection einsum routes
 through :func:`repro.models.layers.proj` (a per-role dispatch point).  The
 dense model runs it hook-free; :class:`repro.exec.dispatch.CompressedModel`
-installs a hook and re-drives the SAME layer bodies (:func:`_attn_layer`)
-in a per-layer loop — compressed operands differ per layer, so the stacked
-``lax.scan`` cannot carry them — swapping planned projections for the
-Pallas sparse kernels.
+installs a hook and drives the SAME scanned stack with an ``extras`` pytree
+(layer-stacked compressed operands, leading axis = layer): the scan body
+installs each layer's slice via :func:`repro.models.layers.layer_ctx`, so
+planned projections resolve their per-layer payloads from inside ONE
+compiled scanned block instead of a per-layer Python re-drive.
 """
 
 from __future__ import annotations
@@ -94,6 +95,12 @@ def _stack(key, n: int, make) -> PyTree:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def _uniform_stack(cfg: ModelConfig) -> bool:
+    """True when the model is one homogeneous scanned attention stack (the
+    families prefill / extras-threading support)."""
+    return cfg.family in ("dense", "moe", "vlm") and cfg.hybrid is None
+
+
 # ---------------------------------------------------------------------------
 # Forward bodies (train/prefill mode)
 # ---------------------------------------------------------------------------
@@ -114,19 +121,25 @@ def _seqpar(x):
 
 
 def _attn_layer(x, p, cfg, freqs, positions, *, causal=True, window=0,
-                kv_override=None):
+                kv_override=None, return_kv=False):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
-    x = x + checkpoint_name(
-        attn.attention_block(h, p["attn"], cfg, freqs, positions,
-                             causal=causal, window=window), "ar_out")
+    a = attn.attention_block(h, p["attn"], cfg, freqs, positions,
+                             causal=causal, window=window,
+                             return_kv=return_kv)
+    if return_kv:
+        a, kv_k, kv_v = a
+    x = x + checkpoint_name(a, "ar_out")
     x = _seqpar(x)
     if kv_override is not None:
         h = L.rms_norm(x, p["ln3"], cfg.norm_eps)
         x = x + attn.attention_block(h, p["cross"], cfg, None, positions,
                                      causal=False, kv_override=kv_override)
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
-    return _seqpar(x + checkpoint_name(_ffn_apply(h, p["ffn"], cfg),
-                                       "ar_out"))
+    out = _seqpar(x + checkpoint_name(_ffn_apply(h, p["ffn"], cfg),
+                                      "ar_out"))
+    if return_kv:
+        return out, kv_k, kv_v
+    return out
 
 
 def _rec_layer(x, p, cfg):
@@ -148,19 +161,28 @@ def _ssm_layer(x, p, cfg):
 # ---------------------------------------------------------------------------
 
 def _run_uniform(x, stacked, cfg: ModelConfig, freqs, positions, kind: str,
-                 remat: bool, window: int = 0):
+                 remat: bool, window: int = 0, extras=None):
+    """Scan the uniform layer stack.
+
+    ``extras`` is an optional pytree with a leading layer axis (e.g. a
+    :class:`repro.exec.compress.StackedStore`'s payloads).  It rides the
+    scan's xs; the body publishes each layer's slice through
+    ``L.layer_ctx`` so the proj hook can resolve layer-varying operands
+    while the compiled graph stays one scanned block."""
     causal = cfg.family != "encdec" or kind != "enc"
 
-    def body(h, p):
-        if kind == "ssm":
-            out, _ = _ssm_layer(h, p, cfg)
-        else:
-            out = _attn_layer(h, p, cfg, freqs, positions,
-                              causal=causal, window=window)
+    def body(h, sl):
+        p, e = sl
+        with L.layer_ctx(e):
+            if kind == "ssm":
+                out, _ = _ssm_layer(h, p, cfg)
+            else:
+                out = _attn_layer(h, p, cfg, freqs, positions,
+                                  causal=causal, window=window)
         return out, None
 
     fn = _ckpt(body) if remat else body
-    x, _ = jax.lax.scan(fn, x, stacked)
+    x, _ = jax.lax.scan(fn, x, (stacked, extras))
     return x
 
 
@@ -266,9 +288,12 @@ class Model:
     # ---------------- forward (train / prefill hidden states) ----------------
     def hidden_states(self, params: PyTree, tokens: jax.Array,
                       enc_frames: Optional[jax.Array] = None,
-                      remat: bool = True) -> jax.Array:
+                      remat: bool = True, extras: PyTree = None) -> jax.Array:
         cfg = self.cfg
         b, s = tokens.shape
+        if extras is not None and not _uniform_stack(cfg):
+            raise NotImplementedError(
+                "extras (layer-stacked operands) need a uniform layer stack")
         x = L.embed(tokens, params["embed"])
         positions = jnp.arange(s)
         freqs = L.rope_freqs(cfg)
@@ -295,7 +320,7 @@ class Model:
                              "ssm", remat)
         else:
             x = _run_uniform(x, params["blocks"], cfg, freqs, positions,
-                             "attn", remat, window=cfg.window)
+                             "attn", remat, window=cfg.window, extras=extras)
         return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
 
     def loss(self, params: PyTree, batch: dict) -> jax.Array:
@@ -304,6 +329,51 @@ class Model:
         return L.unembed_loss(x, params["embed"], batch["labels"])
 
     # ---------------- decode ----------------
+    def prefill(self, params: PyTree, tokens: jax.Array, max_len: int,
+                extras: PyTree = None) -> tuple[jax.Array, PyTree]:
+        """Full-sequence forward that ALSO fills a fresh decode cache.
+
+        One batched pass replaces the token-by-token decode_step ingest:
+        the layer scan's ys carry each layer's post-RoPE, pre-GQA-repeat
+        (K, V) — exactly what :func:`attention_decode_block` would have
+        written — so ``decode_step(pos=s)`` continues seamlessly.  Returns
+        (logits (B, S, V) float32, cache).
+
+        Uniform full-attention stacks only (``window`` rings and
+        hybrid/ssm/encdec states keep the token-by-token path — see
+        ``launch.serve.generate``'s fallback).
+        """
+        cfg = self.cfg
+        if not _uniform_stack(cfg) or cfg.window:
+            raise NotImplementedError(
+                "prefill: uniform full-attention stacks only")
+        b, s = tokens.shape
+        if s > max_len:
+            raise ValueError(f"prompt ({s}) exceeds max_len ({max_len})")
+        x = L.embed(tokens, params["embed"])
+        positions = jnp.arange(s)
+        freqs = L.rope_freqs(cfg)
+
+        def body(h, sl):
+            p, e = sl
+            with L.layer_ctx(e):
+                out, k, v = _attn_layer(h, p, cfg, freqs, positions,
+                                        causal=True, return_kv=True)
+            return out, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], extras))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("btd,vd->btv", x,
+                            params["embed"].astype(L.COMPUTE_DTYPE))
+        logits = shard(logits.astype(jnp.float32), "batch", None, "vocab")
+        cache = self.init_cache(b, max_len)
+        dt = cache["self"]["k"].dtype
+        cache["self"]["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["self"]["k"], ks.astype(dt), 0, axis=2)
+        cache["self"]["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["self"]["v"], vs.astype(dt), 0, axis=2)
+        return logits, cache
+
     def init_cache(self, batch: int, max_len: int) -> PyTree:
         """Zeroed decode caches sized for ``max_len`` context."""
         cfg = self.cfg
@@ -350,10 +420,15 @@ class Model:
         return {"self": kv(cfg.n_layers, max_len)}
 
     def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,
-                    pos: jax.Array) -> tuple[jax.Array, PyTree]:
+                    pos: jax.Array, extras: PyTree = None
+                    ) -> tuple[jax.Array, PyTree]:
         """One token for the whole batch.  tokens: (B,), pos: scalar.
-        Returns (logits (B, V), new cache)."""
+        Returns (logits (B, V), new cache).  ``extras``: optional
+        layer-stacked operand pytree riding the scan (see _run_uniform)."""
         cfg = self.cfg
+        if extras is not None and not _uniform_stack(cfg):
+            raise NotImplementedError(
+                "extras (layer-stacked operands) need a uniform layer stack")
         x = jnp.take(params["embed"], tokens, axis=0).astype(L.COMPUTE_DTYPE)
         freqs = L.rope_freqs(cfg)
 
@@ -490,13 +565,14 @@ class Model:
             cache["self"] = {"k": kk, "v": vv}
         else:
             def body(h, sl):
-                p, kk, vv = sl
+                p, kk, vv, e = sl
                 cache_pos = pos % kk.shape[1] if cfg.window else pos
-                h, kk, vv = attn_step(h, p, kk, vv, cache_pos)
+                with L.layer_ctx(e):
+                    h, kk, vv = attn_step(h, p, kk, vv, cache_pos)
                 return h, (kk, vv)
             x, (kk, vv) = jax.lax.scan(
                 body, x, (params["blocks"], cache["self"]["k"],
-                          cache["self"]["v"]))
+                          cache["self"]["v"], extras))
             cache = {"self": {"k": kk, "v": vv}}
 
         x = L.rms_norm(x[:, None], params["final_norm"], cfg.norm_eps)[:, 0]

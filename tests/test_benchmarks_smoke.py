@@ -36,6 +36,17 @@ def test_run_quick_smoke(capsys, tmp_path):
     assert "exec_ratio_nm24" in out
     assert "exec_calibration_block50" in out
     assert "exec_calibration_iid50" in out
+    # serving plane: prefill + decode throughput, compressed vs dense, and
+    # the scanned-vs-unrolled forward comparison; compressed rows surface
+    # fallback counts + kernel-cache stats
+    for b in (1, 2):
+        assert f"serve_prefill_dense_b{b}" in out
+        assert f"serve_prefill_comp_b{b}" in out
+        assert f"serve_decode_dense_b{b}" in out
+        assert f"serve_decode_comp_b{b}" in out
+    assert "serve_scan_vs_unrolled" in out
+    assert "fallbacks=" in out
+    assert "kcache=" in out
     # cache effectiveness is surfaced
     assert "memo_stats_" in out
     assert "memo_stats_fetch_table" in out
@@ -47,6 +58,8 @@ def test_run_quick_smoke(capsys, tmp_path):
                      "stepwise_batch_search", "tableI_fixed_avg",
                      "dimo_batch_avg", "exec_ratio_block50",
                      "exec_ratio_nm24", "exec_calibration_block50",
+                     "serve_prefill_comp_b1", "serve_decode_comp_b2",
+                     "serve_scan_vs_unrolled",
                      "memo_stats_fetch_table"):
         assert expected in names
     for row in doc["rows"]:

@@ -183,14 +183,24 @@ def test_compressed_forward_bf16_default_close():
 def test_dispatch_jit_cache_shared_across_layers(fp32_compute):
     cfg = _cfg()
     model, plan, pruned, store = _serving(cfg, BLOCK)
+    cm = rexec.CompressedModel(model, store)
+    # unrolled reference path: every (layer, role) projection dispatched,
+    # but only the distinct static configurations built a wrapper —
+    # repeated layers are hits (one per-role t_max shared across layers)
     kops.clear_kernel_cache()
-    rexec.CompressedModel(model, store).hidden_states(pruned, _tokens(cfg))
+    cm.hidden_states_unrolled(pruned, _tokens(cfg))
     stats = kops.kernel_cache_stats()
-    # every (layer, role) projection dispatched, but only the distinct
-    # static configurations built a wrapper — repeated layers are hits
     assert stats["hits"] > 0
     assert stats["entries"] <= len(plan.ops)
     assert stats["hits"] + stats["misses"] == cfg.n_layers * len(plan.ops)
+    # scanned path: the hook runs ONCE per role per trace (the compiled
+    # scan replays it per layer), so a whole forward costs len(plan.ops)
+    # cache lookups — not n_layers × that
+    kops.clear_kernel_cache()
+    cm.hidden_states(pruned, _tokens(cfg))
+    stats = kops.kernel_cache_stats()
+    assert stats["hits"] + stats["misses"] == len(plan.ops)
+    assert stats["entries"] <= len(plan.ops)
 
 
 def test_kernel_wrapper_cache_reuses_jit():
