@@ -9,8 +9,11 @@ report
     (exact, from the realized store) next to the plan's predicted ratio,
     plus dense-vs-compressed forward wall-clock;
   * ``exec_calibration_<pattern>`` — the measured-vs-predicted fetch fit:
-    energy-coefficient scale, worst pre-fit error, worst post-fit residual,
-    and the re-searched predicted-energy drift.
+    DRAM energy-coefficient scale (distinct fetches), worst pre-fit error,
+    worst post-fit residual, the PER-LEVEL half — the GLB scale fitted on
+    the streaming pipeline's refetch residual (total streamed − distinct
+    bits) with its own pre/post drift columns — and the re-searched
+    predicted-energy drift.
 
 The two patterns tell the calibration story from both ends: ``block50``
 (block-clustered zeros, faithfully modeled by ``BlockBernoulli``) fits at
@@ -92,6 +95,9 @@ def run(quick: bool = False) -> None:
         emit(f"exec_calibration_{name}", 0.0,
              f"scale={rep.scale:.3f} pre_fit_err={rep.max_rel_err:.3f} "
              f"residual={rep.max_residual:.3f} "
+             f"glb_scale={rep.glb_scale:.3f} "
+             f"stream_err={rep.max_stream_rel_err:.3f} "
+             f"refetch_residual={rep.max_refetch_residual:.3f} "
              f"energy_drift={rep.energy_drift:+.3f} "
              f"kinds_changed={len(rep.kinds_changed)}")
 

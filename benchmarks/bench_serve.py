@@ -12,6 +12,11 @@ Rows (us_per_call = warm wall-clock of the phase):
     and the kernel jit-cache stats (hits/misses/entries) — the whole
     serving trace should cost one kernel build per planned role, NOT
     ``n_layers ×`` that.
+  * ``serve_pipeline_vs_naive``         — the scanned compressed forward
+    with the double-buffered streaming kernels (the dispatch default)
+    against the same forward forced onto the naive grid-walk kernels
+    (``repro.kernels.ops.pipeline_default``), warm and trace-time, with
+    the numerical diff (parity-pinned ≈ 0).
   * ``serve_scan_vs_unrolled``          — the tentpole comparison: the
     scanned compressed forward (one compiled block, HLO O(1) in depth)
     vs the previous revision's per-layer Python re-drive, first-call
@@ -141,8 +146,27 @@ def run(quick: bool = False) -> None:
                      f"tok/s/dev={b / t_step / ndev:.0f} "
                      f"gen={gen} ndev={ndev}{extra}")
 
-    # tentpole row: scanned compressed forward vs per-layer unrolled
+    # memory-pipeline row: the SAME scanned compressed forward with the
+    # double-buffered streaming kernels (the default) vs the naive
+    # grid-walk kernels, both jitted and warm — results are numerically
+    # identical (the kernels are parity-pinned), so the ratio is what the
+    # weight-streaming pipeline buys the serving plane end to end
     tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, plen)), jnp.int32)
+    with kops.pipeline_default(True):
+        pipe_first, pipe_warm = _first_and_warm(
+            jax.jit(cm.hidden_states), pruned, tokens)
+        y_pipe = jax.jit(cm.hidden_states)(pruned, tokens)
+    with kops.pipeline_default(False):
+        naive_first, naive_warm = _first_and_warm(
+            jax.jit(cm.hidden_states), pruned, tokens)
+        y_naive = jax.jit(cm.hidden_states)(pruned, tokens)
+    maxdiff = float(jnp.max(jnp.abs(y_pipe - y_naive)))
+    emit("serve_pipeline_vs_naive", pipe_warm * 1e6,
+         f"naive/pipelined warm={naive_warm / max(pipe_warm, 1e-9):.2f}x "
+         f"trace={naive_first / max(pipe_first, 1e-9):.2f}x "
+         f"maxdiff={maxdiff:.1e}")
+
+    # tentpole row: scanned compressed forward vs per-layer unrolled
     scan_first, scan_warm = _first_and_warm(
         jax.jit(cm.hidden_states), pruned, tokens)
     unr_first, unr_warm = _first_and_warm(

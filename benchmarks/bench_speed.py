@@ -227,6 +227,51 @@ def run_eval_threads_comparison(quick: bool = False) -> None:
          f"rows={n} (bit-identical; scales with physical cores)")
 
 
+def run_op_workers_comparison(quick: bool = False) -> None:
+    """Serial vs threaded per-op loop (``CoSearchConfig.op_workers``): the
+    same co-search with the pattern-pair inner loop fanned across a thread
+    pool, cold ``search_op``/``mapping_ctx``/``fetch_table`` caches on both
+    sides so every op really searches.  Design, evaluation counts, and the
+    memo hit/miss counters are asserted identical — the ratio is pure
+    intra-pair parallelism (NumPy releases the GIL in the evaluator
+    tail)."""
+    spec = TINY if quick else MODELS["LLaMA2-7B"]
+    wl = build_llm(spec, seq=128 if quick else 2048,
+                   decode_tokens=8 if quick else 128,
+                   act_density=0.75, w_density=0.75)
+    arch = ALL_ARCHS[2]
+    workers = 4
+    memo.clear()
+    cosearch(wl, arch, CFG)              # warm engine/compile/mapping caches
+    memo.clear(names=["search_op", "mapping_ctx", "fetch_table"])
+    memo.reset_stats()
+    t0 = time.perf_counter()
+    serial = cosearch(wl, arch, CFG)
+    t_serial = time.perf_counter() - t0
+    stats_serial = {n: (s.hits, s.misses)
+                    for n, s in memo.stats().items()}
+    memo.clear(names=["search_op", "mapping_ctx", "fetch_table"])
+    memo.reset_stats()
+    t0 = time.perf_counter()
+    par = cosearch(wl, arch,
+                   dataclasses.replace(CFG, op_workers=workers))
+    t_par = time.perf_counter() - t0
+    stats_par = {n: (s.hits, s.misses) for n, s in memo.stats().items()}
+    assert serial.design.edp == par.design.edp and \
+        serial.evaluations == par.evaluations and \
+        serial.stats.fresh_evaluations == par.stats.fresh_evaluations and \
+        [(str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+         for o in serial.design.ops] == \
+        [(str(o.mapping), str(o.fmt_i), str(o.fmt_w))
+         for o in par.design.ops], "op_workers changed co-search results"
+    assert stats_serial["search_op"] == stats_par["search_op"], \
+        "op_workers changed search_op cache counters"
+    tr = t_serial / max(t_par, 1e-9)
+    emit(f"cosearch_op_workers_Arch3_{spec.name}", t_par * 1e6,
+         f"serial/{workers}-worker time={tr:.2f}x "
+         f"evals={par.evaluations} (bit-identical)")
+
+
 def run_stepwise_comparison(quick: bool = False) -> None:
     """Old-vs-new Search-mode stepwise sweep (the Table-I baseline): the
     seed per-pair loop (use_batch=False, caches bypassed) against the
@@ -281,6 +326,7 @@ def run(quick: bool = False) -> None:
     run_evaluator_comparison(quick=quick)
     run_cosearch_gather_comparison(quick=quick)
     run_eval_threads_comparison(quick=quick)
+    run_op_workers_comparison(quick=quick)
     run_stepwise_comparison(quick=quick)
     t_ratios, e_ratios = [], []
     archs = ALL_ARCHS[2:3] if quick else ALL_ARCHS

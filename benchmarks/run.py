@@ -10,7 +10,11 @@ rest — exercised by a tier-1 test so the benchmark drivers can't silently
 rot.  ``--json PATH`` additionally writes every emitted row plus per-suite
 wall-clocks to PATH as JSON; the convention across PRs is ``BENCH_<n>.json``
 (n = PR number), so the perf trajectory stays machine-readable.
-``python benchmarks/run.py [suite-substring] [--quick] [--json PATH]``.
+``--memo PATH`` loads a durable memo snapshot before the suites run and
+saves the (grown) caches back afterwards — repeat runs replay the searches
+they already paid for; a stale snapshot (different code) is ignored.
+``python benchmarks/run.py [suite-substring] [--quick] [--json PATH]
+[--memo PATH]``.
 """
 
 from __future__ import annotations
@@ -60,7 +64,21 @@ def main(argv=None) -> int:
             return 1
         json_path = argv[k + 1]
         del argv[k:k + 2]
+    memo_path = None
+    if "--memo" in argv:
+        k = argv.index("--memo")
+        if k + 1 >= len(argv):
+            print("error: --memo requires a PATH", file=sys.stderr)
+            return 1
+        memo_path = argv[k + 1]
+        del argv[k:k + 2]
     only = argv[0] if argv else None
+    if memo_path is not None:
+        from repro.core import memo
+        if os.path.exists(memo_path):
+            loaded = memo.load(memo_path)
+            print(f"# memo snapshot {memo_path}: "
+                  f"{'loaded' if loaded else 'stale, ignored'}", flush=True)
     rows: list = []
     suite_s: dict[str, float] = {}
     if json_path is not None:
@@ -95,6 +113,11 @@ def main(argv=None) -> int:
                            "quick": quick, "failures": failures},
                           f, indent=1)
             print(f"# wrote {len(rows)} rows to {json_path}", flush=True)
+        if memo_path is not None:
+            from repro.core import memo
+            n = memo.save(memo_path)
+            print(f"# memo snapshot {memo_path}: saved {n} entries",
+                  flush=True)
     return failures
 
 

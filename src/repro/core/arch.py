@@ -49,6 +49,11 @@ class HardwareConfig:
     rf_reuse: float = 16.0              # temporal reuse at the RF level —
     #                                     each GLB word feeds ~this many MACs
     #                                     (Eyeriss row-stationary ≈ 0.5KB RF)
+    glb_resident_frac: float = 0.0      # fraction of GLB capacity the
+    #                                     streaming pipeline may pin for
+    #                                     compressed-payload residency; 0
+    #                                     disables the reuse term (the seed
+    #                                     cost model, bit-for-bit)
 
     @property
     def dram(self) -> MemLevel:
@@ -128,7 +133,25 @@ TPUV5E = HardwareConfig(
 )
 
 
+def with_streaming_reuse(arch: HardwareConfig,
+                         frac: float = 0.5) -> HardwareConfig:
+    """``arch`` with a GLB residency budget for the streaming pipeline.
+
+    ``frac`` of the GLB may hold compressed payload across outer-loop
+    iterations, so re-fetches of the resident slice are served on-chip
+    instead of from DRAM (the cost model's reuse term,
+    ``costmodel._evaluate_terms``).  The name is tagged so memo keys and
+    reports distinguish reuse-aware searches from the baseline."""
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"glb_resident_frac must be in [0,1], got {frac}")
+    return dataclasses.replace(
+        arch, name=f"{arch.name}+resident{frac:g}", glb_resident_frac=frac)
+
+
 def arch_by_name(name: str) -> HardwareConfig:
+    if "+resident" in name:               # with_streaming_reuse round trip
+        base, _, frac = name.rpartition("+resident")
+        return with_streaming_reuse(arch_by_name(base), float(frac))
     table = {a.name: a for a in ALL_ARCHS + (TPUV5E,)}
     # tolerate compact ids
     table.update({"arch1": ARCH1, "arch2": ARCH2, "arch3": ARCH3,

@@ -105,6 +105,13 @@ class CoSearchConfig:
     #                                     None = auto, 1 = serial; any
     #                                     value is bit-identical (the tail
     #                                     is elementwise per row)
+    op_workers: Optional[int] = None    # thread the per-op _search_op loop
+    #                                     inside each pattern pair (ops are
+    #                                     independent given the registry);
+    #                                     None/1 = serial.  Results AND
+    #                                     SearchStats are identical for any
+    #                                     setting (deterministic replay
+    #                                     merge in op order)
 
 
 @dataclasses.dataclass
@@ -258,12 +265,13 @@ def _search_op_key(op: MatMul, arch: HardwareConfig,
                    cfg: CoSearchConfig) -> Optional[tuple]:
     """Cache key for a whole per-op search: the op's SHAPE + sparsity +
     repeat count (its name does not enter any formula), the architecture,
-    the exact candidate pair, and the search config.  ``eval_threads`` is
-    normalized out of the key — it is a perf-only knob whose every setting
-    is bit-identical by contract, so thread settings share one cache."""
+    the exact candidate pair, and the search config.  ``eval_threads`` and
+    ``op_workers`` are normalized out of the key — they are perf-only knobs
+    whose every setting is bit-identical by contract, so thread settings
+    share one cache."""
     key = ((op.M, op.N, op.K, op.sp_i, op.sp_w, op.sp_o, op.count,
             op.value_bits), arch, cand_i, cand_w,
-           dataclasses.replace(cfg, eval_threads=None))
+           dataclasses.replace(cfg, eval_threads=None, op_workers=None))
     try:
         hash(key)
     except TypeError:           # unhashable sparsity model / custom config
@@ -300,6 +308,81 @@ def _search_op(op: MatMul, arch: HardwareConfig,
     if memo.enabled() and key is not None:
         _SEARCH_OP_CACHE[key] = (od, evals)
     return od, evals, False
+
+
+def _search_ops(ops: Sequence[MatMul], arch: HardwareConfig,
+                cand_i: Optional[Candidate], cand_w: Optional[Candidate],
+                cfg: CoSearchConfig
+                ) -> tuple[list[OpDesign], int, int, Optional[str]]:
+    """Search every op of a workload under one fixed pattern pair.
+
+    Returns ``(designs, evaluations, fresh evaluations, failed op name or
+    None)`` — the shared inner loop of :func:`cosearch` and
+    :func:`_multi_work_item`.
+
+    With ``cfg.op_workers`` > 1 the per-op searches run on a thread pool.
+    Ops are independent given the candidate pair, so only the MERGE order
+    matters: one pool task is submitted per unique :func:`_search_op_key`
+    (duplicate-shape ops would otherwise race to compute the same entry;
+    unkeyable ops each get their own task), then results are replayed IN OP
+    ORDER — the first op of each key takes its task's (design, evals, hit)
+    verbatim, later same-key ops re-probe :func:`_search_op` (a guaranteed
+    cache hit that also rebinds the design to that op's name), and counting
+    stops at the first failed op exactly where the serial loop breaks.
+    Designs, evaluation counts, AND memo hit/miss counters are therefore
+    bit-identical to the serial path for any worker count."""
+    workers = cfg.op_workers
+    if not workers or workers <= 1 or len(ops) < 2:
+        designs: list[OpDesign] = []
+        evals = fresh = 0
+        for op in ops:
+            od, e, hit = _search_op(op, arch, cand_i, cand_w, cfg)
+            evals += e
+            if not hit:
+                fresh += e
+            if od is None:
+                return designs, evals, fresh, op.name
+            designs.append(od)
+        return designs, evals, fresh, None
+
+    from concurrent.futures import ThreadPoolExecutor
+    tasks: list[MatMul] = []            # one representative op per task
+    task_of_op: list[tuple[int, bool]] = []     # (task index, first-of-key)
+    if memo.enabled():
+        owner: dict = {}                # cache key -> task index
+        for op in ops:
+            key = _search_op_key(op, arch, cand_i, cand_w, cfg)
+            if key is not None and key in owner:
+                task_of_op.append((owner[key], False))
+                continue
+            idx = len(tasks)
+            tasks.append(op)
+            if key is not None:
+                owner[key] = idx
+            task_of_op.append((idx, True))
+    else:
+        # no cache to dedup through: every op computes independently
+        for i, op in enumerate(ops):
+            tasks.append(op)
+            task_of_op.append((i, True))
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        futs = [ex.submit(_search_op, op, arch, cand_i, cand_w, cfg)
+                for op in tasks]
+        results = [f.result() for f in futs]
+    designs = []
+    evals = fresh = 0
+    for op, (idx, first) in zip(ops, task_of_op):
+        if first:
+            od, e, hit = results[idx]
+        else:
+            od, e, hit = _search_op(op, arch, cand_i, cand_w, cfg)
+        evals += e
+        if not hit:
+            fresh += e
+        if od is None:
+            return designs, evals, fresh, op.name
+        designs.append(od)
+    return designs, evals, fresh, None
 
 
 def _derived_side(cand: Optional[Candidate], spec: TensorSpec,
@@ -623,20 +706,12 @@ def cosearch(workload: Workload, arch: HardwareConfig,
     last_fail: tuple[Optional[str], Optional[tuple]] = (None, None)
     for ci, cw in pairs:
         pair_key = (ci.pattern if ci else None, cw.pattern if cw else None)
-        ops: list[OpDesign] = []
-        ok = True
-        for op in workload.ops:
-            od, e, hit = _search_op(op, arch, ci, cw, cfg)
-            evals += e
-            stats.evaluations += e
-            if not hit:
-                stats.fresh_evaluations += e
-            if od is None:
-                ok = False
-                last_fail = (op.name, pair_key)
-                break
-            ops.append(od)
-        if not ok:
+        ops, e, f, fail = _search_ops(workload.ops, arch, ci, cw, cfg)
+        evals += e
+        stats.evaluations += e
+        stats.fresh_evaluations += f
+        if fail is not None:
+            last_fail = (fail, pair_key)
             continue
         dp = DesignPoint(ops, *pair_key)
         if best_design is None or dp.metric(cfg.objective) < best_design.metric(cfg.objective):
@@ -686,18 +761,8 @@ def _multi_work_item(item: tuple
     key, pair, wl, arch, cfg = item
     ci, cw = pair
     t0 = time.perf_counter()
-    evals = 0
-    fresh = 0
-    ops: list[OpDesign] = []
-    for op in wl.ops:
-        od, e, hit = _search_op(op, arch, ci, cw, cfg)
-        evals += e
-        if not hit:
-            fresh += e
-        if od is None:
-            return ops, evals, fresh, time.perf_counter() - t0, op.name
-        ops.append(od)
-    return ops, evals, fresh, time.perf_counter() - t0, None
+    ops, evals, fresh, fail = _search_ops(wl.ops, arch, ci, cw, cfg)
+    return ops, evals, fresh, time.perf_counter() - t0, fail
 
 
 def _multi_work_item_return_state(item: tuple) -> tuple:

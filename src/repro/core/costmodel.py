@@ -717,9 +717,8 @@ def _evaluate_terms(op: MatMul, arch: HardwareConfig, ctx: _MapCtx, idx,
     o_bits = ctx.o_bits[idx]
 
     # --- DRAM traffic (tile-reuse rule + format fetch model) ---------------
-    dram_bits = (fet_i * f_i * ctx.i_fetch[idx] +
-                 fet_w * f_w * ctx.w_fetch[idx] +
-                 o_bits)
+    dram_i = fet_i * f_i * ctx.i_fetch[idx]
+    dram_w = fet_w * f_w * ctx.w_fetch[idx]
 
     # --- GLB traffic: compressed operands stream fewer bits (data stays
     # compressed in GLB — SCNN-style); skipping suppresses the PARTNER
@@ -728,11 +727,37 @@ def _evaluate_terms(op: MatMul, arch: HardwareConfig, ctx: _MapCtx, idx,
     skip = arch.reduc.kind == "skipping"
     i_partner = rho_w if (skip and arch.reduc.check_w) else 1.0
     w_partner = rho_i if (skip and arch.reduc.check_i) else 1.0
+    glb_extra = 0.0
+
+    # --- streaming-reuse term: a `glb_resident_frac` slice of the GLB may
+    # pin compressed payload across outer-loop iterations, so that fraction
+    # of each operand's RE-fetches (the `f − 1` refetch passes of the
+    # tile-reuse rule) is served on-chip instead of from DRAM.  Distinct
+    # fetches (the first pass) always come from DRAM; avoided refetches are
+    # re-charged as GLB reads.  Decode stays charged per total stream — the
+    # decoder sits at the compute side of the hierarchy either way.  The
+    # term is formulated so that formats which STREAM well (small distinct
+    # payload ⇒ high residency r) separate from formats that merely PACK
+    # well.  Disabled (frac = 0, the default) this branch is skipped
+    # entirely, keeping every seed cost bit-for-bit. -------------------------
+    resident = arch.glb_resident_frac
+    if resident:
+        cap = resident * arch.glb.capacity_bits
+        r_i = np.minimum(cap / np.maximum(fet_i, 1e-30), 1.0)
+        r_w = np.minimum(cap / np.maximum(fet_w, 1e-30), 1.0)
+        refet_i = fet_i * (f_i - 1.0) * ctx.i_fetch[idx]
+        refet_w = fet_w * (f_w - 1.0) * ctx.w_fetch[idx]
+        dram_i = dram_i - refet_i * r_i
+        dram_w = dram_w - refet_w * r_w
+        glb_extra = refet_i * r_i + refet_w * r_w
+
+    dram_bits = dram_i + dram_w + o_bits
     glb_bits = (ctx.glb_i_base[idx] * np.minimum(ratio_i, 1.0) * i_partner
                 + ctx.glb_w_base[idx]
                 * np.minimum(ratio_w, 1.0) * w_partner
                 + ctx.glb_o[idx]
-                + o_bits)
+                + o_bits
+                + glb_extra)
 
     # --- RF + MAC ----------------------------------------------------------
     rf_bits = macs_dense * mac_frac * 3 * vb

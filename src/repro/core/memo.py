@@ -48,6 +48,11 @@ lookups the parent already paid for.  The reverse direction is
 it started with and ships back only the entries IT computed, so the
 parent's caches absorb every worker's work (later searches over shared op
 shapes replay instead of recomputing).
+
+:func:`save` / :func:`load` make snapshots DURABLE: pickled to disk with a
+format version + :func:`code_fingerprint` key, so a later process warms up
+from a previous run's work — and silently ignores snapshots written by
+different code (``benchmarks/run.py --memo PATH`` wires this up).
 """
 
 from __future__ import annotations
@@ -239,6 +244,76 @@ def import_state(state: dict[str, dict]) -> None:
         if cache is not None:
             for k, v in entries.items():
                 cache.setdefault(k, v)
+
+
+# ---------------------------------------------------------------------------
+# Durable snapshots (the persistent memo store)
+# ---------------------------------------------------------------------------
+
+_SNAPSHOT_VERSION = 1
+_FINGERPRINT: Optional[str] = None
+
+
+def code_fingerprint() -> str:
+    """SHA-256 over the ``repro`` package's source files.
+
+    Cache values are pure functions of their keys ONLY while the code that
+    computes them is unchanged — a durable snapshot keyed on this hash can
+    never replay entries produced by different formulas."""
+    global _FINGERPRINT
+    if _FINGERPRINT is None:
+        import hashlib
+        import os
+        pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        h = hashlib.sha256()
+        for root, dirs, files in sorted(os.walk(pkg)):
+            dirs.sort()
+            for f in sorted(files):
+                if not f.endswith(".py"):
+                    continue
+                path = os.path.join(root, f)
+                h.update(os.path.relpath(path, pkg).encode())
+                with open(path, "rb") as fh:
+                    h.update(fh.read())
+        _FINGERPRINT = h.hexdigest()
+    return _FINGERPRINT
+
+
+def save(path: str, names: Optional[Sequence[str]] = None) -> int:
+    """Write a durable snapshot of the (named) registered caches to
+    ``path``; returns the number of entries written.
+
+    The snapshot is pickled with a format version and the current
+    :func:`code_fingerprint`, so :func:`load` can reject snapshots from a
+    different code state instead of replaying stale values."""
+    import pickle
+    state = export_state(names)
+    with open(path, "wb") as f:
+        pickle.dump({"version": _SNAPSHOT_VERSION,
+                     "fingerprint": code_fingerprint(),
+                     "state": state}, f)
+    return sum(len(v) for v in state.values())
+
+
+def load(path: str) -> bool:
+    """Merge a :func:`save` snapshot from ``path`` into the registry.
+
+    Returns True when the snapshot was imported.  A missing, unreadable,
+    or STALE snapshot (version or code-fingerprint mismatch) returns False
+    without touching the caches — persistence is an optimization, never a
+    correctness dependency, so staleness is ignored, not crashed on."""
+    import pickle
+    try:
+        with open(path, "rb") as f:
+            snap = pickle.load(f)
+        if (snap.get("version") != _SNAPSHOT_VERSION
+                or snap.get("fingerprint") != code_fingerprint()):
+            return False
+        state = snap["state"]
+    except Exception:
+        return False
+    import_state(state)
+    return True
 
 
 @contextlib.contextmanager

@@ -64,10 +64,28 @@ class OpCounters:
     y_bits: float = 0.0
     macs: float = 0.0             # useful MACs (compressed operand elems × M)
     decode_ops: float = 0.0       # metadata units decoded (blocks / indices)
+    # distinct-vs-total streaming split (the memory pipeline's two levels):
+    # DISTINCT bits cross DRAM→chip once per call; STREAM bits count every
+    # HBM→VMEM payload transfer the kernel grid actually issues — one full
+    # pass per output-row stripe (M / tile_M), so stream/distinct is the
+    # realized refetch factor the cost model's reuse term prices.
+    w_distinct_bits: float = 0.0
+    w_stream_bits: float = 0.0
 
     @property
     def w_fetch_bits_per_call(self) -> float:
         return self.w_fetch_bits / self.calls if self.calls else 0.0
+
+    @property
+    def w_stream_bits_per_call(self) -> float:
+        return self.w_stream_bits / self.calls if self.calls else 0.0
+
+    @property
+    def refetch_factor(self) -> float:
+        """Measured total-stream / distinct-fetch ratio (≥ 1)."""
+        if not self.w_distinct_bits:
+            return 1.0
+        return self.w_stream_bits / self.w_distinct_bits
 
 
 _ACTIVE_COUNTERS: Optional[dict[str, OpCounters]] = None
@@ -95,11 +113,13 @@ def instrument() -> Iterator[dict[str, OpCounters]]:
 
 def _record(role: str, x2: jax.Array, y_k: int,
             w_bits: float, macs: float, decode_ops: float,
-            layers: int = 1) -> None:
+            layers: int = 1, stream_passes: int = 1) -> None:
     """Record one dispatch covering ``layers`` realized layer matmuls.
 
     ``w_bits``/``macs``/``decode_ops`` are totals over those layers; x/y
-    activation traffic is per-layer and scaled here."""
+    activation traffic is per-layer and scaled here.  ``stream_passes`` is
+    how many times the kernel grid re-streams the full weight payload
+    (one pass per output-row stripe, M / tile_M)."""
     if _ACTIVE_COUNTERS is None:
         return
     c = _ACTIVE_COUNTERS.setdefault(role, OpCounters())
@@ -109,6 +129,8 @@ def _record(role: str, x2: jax.Array, y_k: int,
     c.y_bits += float(layers * x2.shape[0] * y_k * 32)   # kernels emit f32
     c.macs += macs
     c.decode_ops += decode_ops
+    c.w_distinct_bits += w_bits
+    c.w_stream_bits += w_bits * stream_passes
 
 
 def measured_w_bits(entry: CompressedTensor) -> float:
@@ -158,14 +180,16 @@ class _Dispatcher:
             nnzb = int(np.asarray(d.counts).sum())
             _record(role, x2, d.k, w_bits=entry.stored_bits,
                     macs=float(m) * nnzb * d.bn * d.bk,
-                    decode_ops=float(nnzb))
+                    decode_ops=float(nnzb),
+                    stream_passes=m // _tile(m))
             y = kops.bitmap_spmm(x2, d, bm=_tile(m),
                                  t_max=self._t_max[role])
         elif entry.kind == "nm":
             d = entry.data
             _record(role, x2, d.k, w_bits=entry.stored_bits,
                     macs=float(m) * d.values.size,
-                    decode_ops=float(d.indices.size))
+                    decode_ops=float(d.indices.size),
+                    stream_passes=m // _tile(m))
             y = kops.nm_spmm(x2, d, bm=_tile(m),
                              bn=_tile(d.n, multiple=d.m_group),
                              bk=_tile(d.k))
@@ -212,7 +236,8 @@ class _StackedDispatcher:
                 n=sr.n, k=sr.k, bn=sr.bn, bk=sr.bk, max_per_col=sr.t_max)
             _record(role, x2, sr.k, w_bits=sr.stored_bits,
                     macs=float(m) * sr.payload_elems,
-                    decode_ops=sr.decode_units, layers=nl)
+                    decode_ops=sr.decode_units, layers=nl,
+                    stream_passes=m // _tile(m))
             y = kops.bitmap_spmm(x2, bc, bm=_tile(m), t_max=sr.t_max)
         else:                                 # nm
             nc = kops.NMCompressed(
@@ -220,7 +245,8 @@ class _StackedDispatcher:
                 n=sr.n, k=sr.k, n_sel=sr.n_sel, m_group=sr.m_group)
             _record(role, x2, sr.k, w_bits=sr.stored_bits,
                     macs=float(m) * sr.payload_elems,
-                    decode_ops=sr.decode_units, layers=nl)
+                    decode_ops=sr.decode_units, layers=nl,
+                    stream_passes=m // _tile(m))
             y = kops.nm_spmm(x2, nc, bm=_tile(m),
                              bn=_tile(sr.n, multiple=sr.m_group),
                              bk=_tile(sr.k))

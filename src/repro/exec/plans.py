@@ -23,11 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.arch import TPUV5E, HardwareConfig, arch_by_name
 from repro.core.cosearch import CoSearchConfig, SearchResult, cosearch
+from repro.core.dataflow import irrelevant_refetch
 from repro.core.engine import EngineConfig
 from repro.core.costmodel import compile_format
 from repro.core.formats import Format
@@ -170,6 +172,10 @@ class OpPlan:
     ``predicted_*_fetch_bits`` are the cost model's expected bits moved in
     ONE full DRAM pass over the operand under the winning (format, tile) —
     the terms the calibration loop compares measured counters against.
+    ``predicted_w_stream_bits`` multiplies in the mapping's tile-reuse
+    refetch factor (``irrelevant_refetch``): the TOTAL W-side payload the
+    memory pipeline streams across all output-stripe passes, compared
+    against the measured ``OpCounters.w_stream_bits``.
     ``predicted_dram_bits`` / ``predicted_energy`` are the op's full
     count-scaled :class:`~repro.core.costmodel.CostReport` values."""
 
@@ -184,6 +190,7 @@ class OpPlan:
     predicted_i_fetch_bits: float
     predicted_dram_bits: float
     predicted_energy: float
+    predicted_w_stream_bits: float = 0.0
 
 
 def _sparsity_to_dict(sp: Sparsity) -> dict:
@@ -227,6 +234,8 @@ class ExecPlan:
     act_density: float = 1.0
     value_bits: int = 16
     energy_scale: float = 1.0   # calibration fit applied to the DRAM pj/bit
+    glb_energy_scale: float = 1.0   # calibration fit applied to the GLB
+    #                                 pj/bit (refetch-residual fit)
     search: Optional[SearchResult] = dataclasses.field(
         default=None, compare=False, repr=False)
 
@@ -245,10 +254,11 @@ class ExecPlan:
         calibration scale (if any) re-applied — calibrated plans stay
         resolvable after a JSON round trip."""
         base = arch_by_name(self.arch)
-        if self.energy_scale == 1.0:
+        if self.energy_scale == 1.0 and self.glb_energy_scale == 1.0:
             return base
         from repro.exec.calibrate import calibrated_hardware
-        return calibrated_hardware(base, self.energy_scale)
+        return calibrated_hardware(base, self.energy_scale,
+                                   glb_scale=self.glb_energy_scale)
 
     def fallbacks(self) -> dict[str, FallbackReason]:
         """Roles whose format winner could not be served natively."""
@@ -289,7 +299,8 @@ class ExecPlan:
                         n_layers=d["n_layers"], w_sparsity=dict(d["w_sparsity"]),
                         ops=tuple(ops), act_density=d["act_density"],
                         value_bits=d["value_bits"],
-                        energy_scale=d.get("energy_scale", 1.0))
+                        energy_scale=d.get("energy_scale", 1.0),
+                        glb_energy_scale=d.get("glb_energy_scale", 1.0))
 
     @staticmethod
     def from_json(s: str) -> "ExecPlan":
@@ -356,13 +367,20 @@ def build_exec_plan(cfg: ModelConfig, w_sparsity: Sparsity,
         spec_i = TensorSpec(op.i_dims(), op.sp_i, op.value_bits)
         cf_w = compile_format(od.fmt_w, spec_w)
         cf_i = compile_format(od.fmt_i, spec_i)
+        w_fetch = float(cf_w.fetched_bits(od.mapping.tile))
+        # tile-reuse refetch factor of the winning loop order: how many
+        # times the full W payload streams DRAM→chip across output tiles
+        ext = {"M": op.M, "N": op.N, "K": op.K}
+        bounds = {d: math.ceil(ext[d] / od.mapping.tile[d]) for d in ext}
+        f_w = irrelevant_refetch(od.mapping.order, "W", bounds)
         ops.append(OpPlan(
             role=op.name, m=op.M, n=op.N, k=op.K, count=op.count,
             choice=choice, tile=dict(od.mapping.tile),
-            predicted_w_fetch_bits=float(cf_w.fetched_bits(od.mapping.tile)),
+            predicted_w_fetch_bits=w_fetch,
             predicted_i_fetch_bits=float(cf_i.fetched_bits(od.mapping.tile)),
             predicted_dram_bits=float(od.cost.dram_bits),
-            predicted_energy=float(od.cost.energy)))
+            predicted_energy=float(od.cost.energy),
+            predicted_w_stream_bits=w_fetch * f_w))
     return ExecPlan(model=cfg.name, arch=hardware.name,
                     objective=scfg.objective, tokens=tokens,
                     n_layers=cfg.n_layers,

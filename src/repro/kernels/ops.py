@@ -12,10 +12,26 @@ repeated layers of a served model each paid a retrace.  Now the partial is
 built once per (kernel, static args) key and jax's own per-shape cache does
 the rest; :func:`kernel_cache_stats` exposes hit counters so tests can pin
 that the second call of a shape reuses the first's compilation.
+
+Cache keying, precisely: every knob that changes the compiled grid or body
+is in the key — for bitmap that is ``(k, bm, t_max, pipeline, interpret)``,
+for N:M ``(n_sel, m_group, bm, bn, bk, pipeline, interpret)``.  The
+``t_max`` entry is what lets the scanned serving path and the unrolled
+per-layer loop SHARE entries: both dispatch with the per-role
+across-layers max (the scanned path because the stacked store pads every
+layer to one bound, the unrolled path because ``_Dispatcher`` pre-computes
+the same max), so the key tuples coincide.  Dispatching a role with a
+per-layer ``t_max`` instead would fork one cache entry per distinct layer
+bound and silently recompile under scan — the regression test
+``test_kernel_cache_shared_between_scanned_and_unrolled`` pins the shared
+count.  ``pipeline`` is in the key even though the streaming kernel
+ignores ``t_max``: two wrappers differing only in path choice must never
+alias.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 
@@ -30,6 +46,38 @@ from repro.kernels.nm_spmm import nm_spmm_pallas
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+_PIPELINE_DEFAULT = True
+
+
+def resolve_pipeline(pipeline: bool | None) -> bool:
+    """Resolve the dispatch-level ``pipeline`` knob (None → default).
+
+    The double-buffered streaming path is the default on every backend: on
+    TPU it overlaps HBM→VMEM payload DMAs with the MXU, and even the
+    interpret-mode discharge on CPU wins because its per-``kj`` loop walks
+    only ``counts[kj]`` real blocks instead of the naive path's full
+    ``t_max`` grid steps.  ``pipeline=False`` keeps the seed's naive
+    BlockSpec-driven kernels for parity tests and benchmarks."""
+    return _PIPELINE_DEFAULT if pipeline is None else bool(pipeline)
+
+
+@contextlib.contextmanager
+def pipeline_default(on: bool):
+    """Temporarily change what ``pipeline=None`` resolves to.
+
+    Lets whole execution paths that never thread the knob (the serving
+    dispatchers) be timed against the naive kernels — both settings share
+    the jit-wrapper cache because the RESOLVED value is what enters the
+    key."""
+    global _PIPELINE_DEFAULT
+    prev = _PIPELINE_DEFAULT
+    _PIPELINE_DEFAULT = bool(on)
+    try:
+        yield
+    finally:
+        _PIPELINE_DEFAULT = prev
 
 
 # ---------------------------------------------------------------------------
@@ -102,25 +150,31 @@ def compress_bitmap(w, bn: int = 128, bk: int = 128) -> BitmapCompressed:
         max_per_col=int(counts.max()) if counts.size else 1)
 
 
-def _bitmap_builder(k: int, bm: int, t_max: int, interpret: bool):
+def _bitmap_builder(k: int, bm: int, t_max: int, pipeline: bool,
+                    interpret: bool):
     return functools.partial(bitmap_spmm_pallas, k=k, bm=bm, t_max=t_max,
-                             interpret=interpret)
+                             pipeline=pipeline, interpret=interpret)
 
 
 def bitmap_spmm(x: jax.Array, w: BitmapCompressed, bm: int = 128,
-                t_max: int | None = None) -> jax.Array:
+                t_max: int | None = None,
+                pipeline: bool | None = None) -> jax.Array:
     """Y = X @ W_blocksparse; dispatches to the Pallas kernel.
 
     ``t_max`` (default: ``w.max_per_col``) is part of the static cache key,
-    so the grid's innermost bound is always the statically-known tightest —
-    even under jit/scan, where ``counts`` is a tracer and the kernel's own
-    inference would have to assume every stored block.  A layer-stacked
-    store passes its shared across-layers bound here, which is what keys
-    the cache on the STACKED configuration instead of per-layer values."""
+    so the naive path's innermost grid bound is always the statically-known
+    tightest — even under jit/scan, where ``counts`` is a tracer and the
+    kernel's own inference would have to assume every stored block.  A
+    layer-stacked store passes its shared across-layers bound here, which
+    is what keys the cache on the STACKED configuration instead of
+    per-layer values (and what lets scanned and unrolled forwards share
+    entries — see the module docstring).  The streaming path ignores
+    ``t_max`` (its loop bound is the runtime ``counts[kj]``) but keeps it
+    in the key so switching paths never aliases a wrapper."""
     if t_max is None:
         t_max = w.max_per_col
     fn = _jitted("bitmap", _bitmap_builder, w.k, bm, max(int(t_max), 1),
-                 _interpret())
+                 resolve_pipeline(pipeline), _interpret())
     return fn(x, w.blocks, w.counts, w.row_ids, w.offsets)
 
 
@@ -151,15 +205,16 @@ def compress_nm(w, n_sel: int = 2, m_group: int = 4) -> NMCompressed:
 
 
 def _nm_builder(n_sel: int, m_group: int, bm: int, bn: int, bk: int,
-                interpret: bool):
+                pipeline: bool, interpret: bool):
     return functools.partial(nm_spmm_pallas, n_sel=n_sel, m_group=m_group,
-                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+                             bm=bm, bn=bn, bk=bk, pipeline=pipeline,
+                             interpret=interpret)
 
 
 def nm_spmm(x: jax.Array, w: NMCompressed, bm: int = 128, bn: int = 128,
-            bk: int = 128) -> jax.Array:
+            bk: int = 128, pipeline: bool | None = None) -> jax.Array:
     fn = _jitted("nm", _nm_builder, w.n_sel, w.m_group, bm, bn, bk,
-                 _interpret())
+                 resolve_pipeline(pipeline), _interpret())
     return fn(x, w.values, w.indices)
 
 

@@ -47,6 +47,13 @@ def test_run_quick_smoke(capsys, tmp_path):
     assert "serve_scan_vs_unrolled" in out
     assert "fallbacks=" in out
     assert "kcache=" in out
+    # memory pipeline: pipelined-vs-naive kernel + serving rows, the
+    # threaded per-op search comparison, and the per-level GLB fit
+    assert "kernel_bitmap_spmm_pipeline" in out
+    assert "kernel_nm_spmm_pipeline" in out
+    assert "serve_pipeline_vs_naive" in out
+    assert "cosearch_op_workers" in out
+    assert "glb_scale=" in out
     # cache effectiveness is surfaced
     assert "memo_stats_" in out
     assert "memo_stats_fetch_table" in out
@@ -75,7 +82,7 @@ def test_run_json_requires_path(capsys):
 
 def test_run_quick_skips_suites_without_quick_mode(capsys):
     from benchmarks import run as bench_run
-    failures = bench_run.main(["kernels", "--quick"])
+    failures = bench_run.main(["fig5", "--quick"])
     out = capsys.readouterr().out
     assert failures == 0
     assert "skipped (no quick mode)" in out
