@@ -21,6 +21,12 @@ Rows (us_per_call = warm wall-clock of the phase):
     scanned compressed forward (one compiled block, HLO O(1) in depth)
     vs the previous revision's per-layer Python re-drive, first-call
     (trace + compile) and warm.
+  * ``serve_guarded_vs_unguarded``      — the robustness-layer overhead:
+    the guarded driver (store verification, per-step finite-logit check,
+    undonated decode cache — :func:`repro.runtime.guard.guarded_generate`)
+    vs the plain driver on the same healthy store, whole-generation
+    decode seconds per token, plus the health summary and a token-
+    equality check (guarded must change nothing when nothing is wrong).
 
 Dense rows serve the SAME pruned weight tree the compressed store was
 built from, so the comparison isolates the execution path.  With more
@@ -177,6 +183,27 @@ def run(quick: bool = False) -> None:
          f"unrolled_warm_us={unr_warm * 1e6:.0f} layers={cfg.n_layers} "
          f"speedup_trace={unr_first / scan_first:.2f}x "
          f"speedup_warm={unr_warm / scan_warm:.2f}x")
+
+    # robustness row: the guarded serving path vs the plain driver on the
+    # same healthy store.  Both drivers re-jit their decode step per
+    # invocation, so each side's decode time includes one compile plus the
+    # per-step work — the delta is the guard's real cost (finite-logit
+    # host sync each step + the undonated cache copy)
+    from repro.launch import serve as serve_mod
+    from repro.runtime.guard import guarded_generate
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (2, plen)), jnp.int32)
+    toks_u, _, t_gen_u = serve_mod.generate(cm, pruned, prompts, gen,
+                                            plen + gen)
+    toks_g, report = guarded_generate(cm, pruned, prompts, gen, plen + gen)
+    step_u = t_gen_u / gen
+    step_g = report.t_decode_s / max(report.steps, 1)
+    emit("serve_guarded_vs_unguarded", step_g * 1e6,
+         f"unguarded_us={step_u * 1e6:.0f} "
+         f"overhead={step_g / max(step_u, 1e-9):.2f}x gen={gen} "
+         f"healthy={report.healthy} verify_roles={len(report.verify)} "
+         f"retries={report.retries} "
+         f"fallbacks={report.fallback_counts() or 'none'} "
+         f"tokens_match={bool(jnp.all(toks_u == toks_g))}")
 
 
 if __name__ == "__main__":

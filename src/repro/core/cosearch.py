@@ -786,6 +786,8 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
                    cfg: CoSearchConfig = CoSearchConfig(),
                    workers: Optional[int] = None,
                    executor: str = "thread",
+                   memo_autosave: Optional[str] = None,
+                   autosave_every: int = 16,
                    ) -> tuple[dict[str, SearchResult], tuple, float]:
     """Pick ONE shared format pair across models minimizing the importance-
     weighted objective.  Returns (per-model results under the winning pair,
@@ -816,7 +818,16 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
     identical across executors and worker counts — with one diagnostic
     exception: ``SearchStats.fresh_evaluations`` reflects which items
     found a warm cache, which under a pool depends on scheduling; it is
-    deterministic only on the serial path."""
+    deterministic only on the serial path.
+
+    ``memo_autosave`` checkpoints the long phase-2 loop: the memo registry
+    snapshots to that path (:func:`repro.core.memo.save`) after every
+    ``autosave_every`` completed work items and again at the end.  After a
+    crash/kill, a fresh process that :func:`repro.core.memo.load`\\ s the
+    snapshot and re-runs the same call replays the completed items from
+    cache and recomputes only the rest — results are bit-identical to an
+    uninterrupted run (the memo replays recorded designs AND eval
+    counters)."""
     # -- phase 1: candidate generation, union of pattern pairs over models --
     per_model_stats: dict[str, SearchStats] = {}
     pair_keys: dict[tuple, tuple[Optional[Candidate], Optional[Candidate]]] = {}
@@ -842,6 +853,11 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
     work = [(key, pair, wl) for key, pair in items for wl in workloads]
     payload = [(key, pair, wl, arch, cfg) for key, pair, wl in work]
 
+    def autosave(done: int) -> None:
+        if memo_autosave and autosave_every > 0 \
+                and done % autosave_every == 0:
+            memo.save(memo_autosave)
+
     if workers is not None and workers > 1 and executor == "process":
         from concurrent.futures import ProcessPoolExecutor
         state = memo.export_state()
@@ -855,12 +871,21 @@ def cosearch_multi(workloads: Sequence[Workload], arch: HardwareConfig,
                 # op shapes replay it instead of recomputing
                 memo.import_state(out[-1])
                 results.append(out[:-1])
+                autosave(len(results))
     elif workers is not None and workers > 1:
         from concurrent.futures import ThreadPoolExecutor
+        results = []
         with ThreadPoolExecutor(max_workers=workers) as ex:
-            results = list(ex.map(_multi_work_item, payload))
+            for out in ex.map(_multi_work_item, payload):
+                results.append(out)
+                autosave(len(results))
     else:
-        results = [_multi_work_item(item) for item in payload]
+        results = []
+        for item in payload:
+            results.append(_multi_work_item(item))
+            autosave(len(results))
+    if memo_autosave:
+        memo.save(memo_autosave)
 
     # -- phase 3: deterministic merge in work-list order --------------------
     table: dict[str, dict[tuple, float]] = {wl.name: {} for wl in workloads}

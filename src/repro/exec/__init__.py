@@ -10,18 +10,20 @@
     least-squares energy-coefficient fitting, search re-run drift report.
 """
 
-from repro.exec.plans import (ExecPlan, FallbackReason, KernelChoice, OpPlan,
+from repro.exec.plans import (PLAN_VERSION, ExecPlan, FallbackReason,
+                              KernelChoice, OpPlan, PlanVersionError,
                               build_exec_plan, model_workload)
 from repro.exec.compress import (CompressedStore, StackedStore,
                                  compress_params, prune_params, stack_store)
-from repro.exec.dispatch import CompressedModel, OpCounters, instrument
+from repro.exec.dispatch import (CompressedModel, OpCounters, instrument,
+                                 kernel_guard)
 from repro.exec.calibrate import CalibrationReport, calibrate
 
 __all__ = [
-    "ExecPlan", "FallbackReason", "KernelChoice", "OpPlan",
-    "build_exec_plan", "model_workload",
+    "PLAN_VERSION", "ExecPlan", "FallbackReason", "KernelChoice", "OpPlan",
+    "PlanVersionError", "build_exec_plan", "model_workload",
     "CompressedStore", "StackedStore", "compress_params", "prune_params",
     "stack_store",
-    "CompressedModel", "OpCounters", "instrument",
+    "CompressedModel", "OpCounters", "instrument", "kernel_guard",
     "CalibrationReport", "calibrate",
 ]

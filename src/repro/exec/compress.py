@@ -94,6 +94,27 @@ class CompressedStore:
         out["total"] = self.achieved_ratio()
         return out
 
+    # -- integrity ----------------------------------------------------------
+    def verify(self) -> dict[str, str]:
+        """Structural invariants + content checksums for every role.
+
+        Raises :class:`repro.runtime.integrity.IntegrityError` on the first
+        violation; returns ``{role: "ok"}`` otherwise.  Checksums compare
+        against ``plan.checksums`` (recorded by :func:`compress_params`);
+        plans without recorded digests get structure-only verification."""
+        from repro.runtime import integrity
+        return integrity.verify(self)
+
+    def without_roles(self, roles) -> "CompressedStore":
+        """A new store with the given roles' entries removed.
+
+        Dropping a role makes the dispatcher fall through to the dense
+        einsum over the (pruned) params pytree — the guarded serving path's
+        per-role demotion after an integrity violation."""
+        drop = set(roles)
+        return CompressedStore(self.plan, {
+            k: e for k, e in self.entries.items() if e.role not in drop})
+
 
 def _stored_bits(kind: str, data: Any, vb: int) -> float:
     """Exact stored size: payload + metadata of the realized encoding."""
@@ -161,7 +182,14 @@ def compress_params(params: dict, plan: ExecPlan, cfg: ModelConfig
                     layer=layer, role=op.role, expert=expert, kind=ch.kind,
                     data=data, dense_bits=dense_bits,
                     stored_bits=_stored_bits(ch.kind, data, vb))
-    return CompressedStore(plan, entries)
+    store = CompressedStore(plan, entries)
+    # record per-role content digests IN the plan: the plan is the durable
+    # artifact (JSON round-tripped), so a store rebuilt or reloaded later
+    # verifies against what compression actually produced
+    from repro.runtime import integrity
+    store.plan = dataclasses.replace(
+        plan, checksums=integrity.checksum_store(store))
+    return store
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +251,16 @@ class StackedStore:
         padded = sum(sr.padded_bits for sr in self.roles.values()
                      if sr.data is not None)
         return padded / stored if stored else 1.0
+
+    # -- integrity ----------------------------------------------------------
+    def verify(self) -> dict[str, str]:
+        """Verify the SERVING representation: per-layer structural checks on
+        the stacked slices plus content digests re-derived from the logical
+        (un-padded) encoding, compared against ``plan.checksums``.  Raises
+        :class:`repro.runtime.integrity.IntegrityError` on violation;
+        dense-kind roles carry no stacked payload and are skipped."""
+        from repro.runtime import integrity
+        return integrity.verify(self)
 
 
 def _stack_bitmap(role: str, entries: list[CompressedTensor]) -> StackedRole:

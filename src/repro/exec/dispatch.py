@@ -139,6 +139,45 @@ def measured_w_bits(entry: CompressedTensor) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Trace-time kernel-failure guard
+# ---------------------------------------------------------------------------
+
+_KERNEL_GUARD = None
+
+
+@contextlib.contextmanager
+def kernel_guard(sink) -> Iterator[None]:
+    """Per-role dense fallback for kernel dispatch failures.
+
+    While active, an exception raised by a compressed kernel call inside a
+    dispatcher (a lowering/launch failure — or an injected one, see
+    :func:`repro.kernels.ops.kernel_fault_hook`) is reported to
+    ``sink(role, exc)`` and the projection returns ``None``, falling
+    through to the dense einsum over the params pytree, instead of failing
+    the whole forward.  The failure surfaces at TRACE time, so the demotion
+    is baked into that trace's compiled graph.  Without the guard (the
+    default) kernel exceptions propagate unchanged."""
+    global _KERNEL_GUARD
+    prev = _KERNEL_GUARD
+    _KERNEL_GUARD = sink
+    try:
+        yield
+    finally:
+        _KERNEL_GUARD = prev
+
+
+def _guarded_kernel(role: str, fn):
+    """Run one kernel dispatch under the active guard (if any)."""
+    if _KERNEL_GUARD is None:
+        return fn()
+    try:
+        return fn()
+    except Exception as e:                     # noqa: BLE001 — reported, not hidden
+        _KERNEL_GUARD(role, e)
+        return None
+
+
+# ---------------------------------------------------------------------------
 # The dispatchers (repro.models.layers.proj hooks)
 # ---------------------------------------------------------------------------
 
@@ -177,22 +216,26 @@ class _Dispatcher:
         m = x2.shape[0]
         if entry.kind == "bitmap":
             d = entry.data
+            y = _guarded_kernel(role, lambda: kops.bitmap_spmm(
+                x2, d, bm=_tile(m), t_max=self._t_max[role]))
+            if y is None:                     # guarded kernel failure: dense
+                return None
             nnzb = int(np.asarray(d.counts).sum())
             _record(role, x2, d.k, w_bits=entry.stored_bits,
                     macs=float(m) * nnzb * d.bn * d.bk,
                     decode_ops=float(nnzb),
                     stream_passes=m // _tile(m))
-            y = kops.bitmap_spmm(x2, d, bm=_tile(m),
-                                 t_max=self._t_max[role])
         elif entry.kind == "nm":
             d = entry.data
+            y = _guarded_kernel(role, lambda: kops.nm_spmm(
+                x2, d, bm=_tile(m), bn=_tile(d.n, multiple=d.m_group),
+                bk=_tile(d.k)))
+            if y is None:                     # guarded kernel failure: dense
+                return None
             _record(role, x2, d.k, w_bits=entry.stored_bits,
                     macs=float(m) * d.values.size,
                     decode_ops=float(d.indices.size),
                     stream_passes=m // _tile(m))
-            y = kops.nm_spmm(x2, d, bm=_tile(m),
-                             bn=_tile(d.n, multiple=d.m_group),
-                             bk=_tile(d.k))
         else:
             # dense-kind: record the dense traffic, run the standard einsum
             _record(role, x2, w.shape[-1],
@@ -234,22 +277,27 @@ class _StackedDispatcher:
                 blocks=d["blocks"], counts=d["counts"],
                 row_ids=d["row_ids"], offsets=d["offsets"],
                 n=sr.n, k=sr.k, bn=sr.bn, bk=sr.bk, max_per_col=sr.t_max)
+            y = _guarded_kernel(role, lambda: kops.bitmap_spmm(
+                x2, bc, bm=_tile(m), t_max=sr.t_max))
+            if y is None:                     # guarded kernel failure: dense
+                return None
             _record(role, x2, sr.k, w_bits=sr.stored_bits,
                     macs=float(m) * sr.payload_elems,
                     decode_ops=sr.decode_units, layers=nl,
                     stream_passes=m // _tile(m))
-            y = kops.bitmap_spmm(x2, bc, bm=_tile(m), t_max=sr.t_max)
         else:                                 # nm
             nc = kops.NMCompressed(
                 values=d["values"], indices=d["indices"],
                 n=sr.n, k=sr.k, n_sel=sr.n_sel, m_group=sr.m_group)
+            y = _guarded_kernel(role, lambda: kops.nm_spmm(
+                x2, nc, bm=_tile(m), bn=_tile(sr.n, multiple=sr.m_group),
+                bk=_tile(sr.k)))
+            if y is None:                     # guarded kernel failure: dense
+                return None
             _record(role, x2, sr.k, w_bits=sr.stored_bits,
                     macs=float(m) * sr.payload_elems,
                     decode_ops=sr.decode_units, layers=nl,
                     stream_passes=m // _tile(m))
-            y = kops.nm_spmm(x2, nc, bm=_tile(m),
-                             bn=_tile(sr.n, multiple=sr.m_group),
-                             bk=_tile(sr.k))
         return y.astype(x.dtype).reshape(*lead, y.shape[-1])
 
 
@@ -303,6 +351,24 @@ class CompressedModel:
     def cfg(self):
         return self.model.cfg
 
+    # -- integrity ----------------------------------------------------------
+    def verify(self) -> dict[str, str]:
+        """Verify BOTH representations this model serves from: the
+        per-layer store (checksums + structure) and the layer-stacked
+        serving payloads.  Raises the first
+        :class:`repro.runtime.integrity.IntegrityError`; returns the merged
+        ``{role: "ok"}`` map otherwise."""
+        out = self.store.verify()
+        out.update(self.stacked.verify())
+        return out
+
+    def demoted(self, roles) -> "CompressedModel":
+        """A new model with the given roles served DENSE (entries dropped
+        from the store; the stacked representation is rebuilt).  The guarded
+        serving path calls this after an integrity violation so one corrupt
+        role costs its compression ratio, not the whole batch."""
+        return CompressedModel(self.model, self.store.without_roles(roles))
+
     # -- full-sequence forward ---------------------------------------------
     def hidden_states(self, params, tokens: jax.Array) -> jax.Array:
         with active_stacked(self.stacked):
@@ -350,11 +416,12 @@ class CompressedModel:
                                           extras=self.stacked.extras())
 
     def generate(self, params, prompts: jax.Array, gen: int,
-                 max_len: Optional[int] = None):
+                 max_len: Optional[int] = None, **kwargs):
         """Greedy batched generation (shared driver with the dense model:
         :func:`repro.launch.serve.generate`).  Returns
-        (tokens (B, gen), t_prefill_s, t_gen_s)."""
+        (tokens (B, gen), t_prefill_s, t_gen_s); with ``guarded=True`` a
+        :class:`repro.runtime.guard.HealthReport` is appended."""
         from repro.launch import serve
         if max_len is None:
             max_len = prompts.shape[1] + gen
-        return serve.generate(self, params, prompts, gen, max_len)
+        return serve.generate(self, params, prompts, gen, max_len, **kwargs)

@@ -40,6 +40,26 @@ from repro.core.workload import MatMul, Workload
 
 MXU_ALIGN = 128
 
+#: Current :class:`ExecPlan` JSON schema version.  v1 plans (no ``version``
+#: key, no ``checksums``) predate PR 8 and still load; bumping this requires
+#: teaching :meth:`ExecPlan.from_dict` the new layout.
+PLAN_VERSION = 2
+
+
+class PlanVersionError(ValueError):
+    """A serialized plan declares a schema version this code cannot read.
+
+    Raised by :meth:`ExecPlan.from_dict` BEFORE any field access, so a
+    future-format plan fails with a structured error naming both versions
+    instead of a ``KeyError`` deep in ``hardware()`` resolution."""
+
+    def __init__(self, found: int, supported: int = PLAN_VERSION):
+        self.found = found
+        self.supported = supported
+        super().__init__(
+            f"ExecPlan schema version {found} is newer than the supported "
+            f"version {supported}; refusing to guess at the layout")
+
 
 # ---------------------------------------------------------------------------
 # Kernel choices + structured fallbacks
@@ -47,13 +67,20 @@ MXU_ALIGN = 128
 
 @dataclasses.dataclass(frozen=True)
 class FallbackReason:
-    """Why a format winner could not be served by a native kernel.
+    """Why a planned role is (or went) dense instead of a native kernel.
 
     ``code`` is machine-checkable; ``detail`` carries the human context
-    (typically the format string).  Recorded on the :class:`KernelChoice`
-    so unservable winners are visible instead of quietly dropped."""
+    (typically the format string).  Plan-time reasons are recorded on the
+    :class:`KernelChoice` so unservable winners are visible instead of
+    quietly dropped; the guarded serving path (:mod:`repro.runtime.guard`)
+    reuses the same type for RUNTIME demotions, with codes
+    ``integrity_violation`` / ``kernel_failure`` / ``nonfinite_logits`` /
+    ``deadline_exceeded`` / ``step_failure``."""
 
-    code: str        # "no_tpu_kernel" | "unallocated_leaf"
+    code: str        # plan: "no_tpu_kernel" | "unallocated_leaf"
+    #                # runtime: "integrity_violation" | "kernel_failure" |
+    #                #   "nonfinite_logits" | "deadline_exceeded" |
+    #                #   "step_failure"
     detail: str = ""
 
 
@@ -236,6 +263,11 @@ class ExecPlan:
     energy_scale: float = 1.0   # calibration fit applied to the DRAM pj/bit
     glb_energy_scale: float = 1.0   # calibration fit applied to the GLB
     #                                 pj/bit (refetch-residual fit)
+    version: int = PLAN_VERSION
+    # per-role sha256 content digests of the compressed payloads, recorded
+    # by compress.compress_params and re-checked by CompressedStore.verify /
+    # StackedStore.verify (empty for plans that never met real weights)
+    checksums: dict = dataclasses.field(default_factory=dict)
     search: Optional[SearchResult] = dataclasses.field(
         default=None, compare=False, repr=False)
 
@@ -286,6 +318,9 @@ class ExecPlan:
 
     @staticmethod
     def from_dict(d: dict) -> "ExecPlan":
+        version = int(d.get("version", 1))   # v1 predates the version key
+        if version > PLAN_VERSION:
+            raise PlanVersionError(version)
         ops = []
         for o in d["ops"]:
             fb = o["choice"].get("fallback")
@@ -300,7 +335,9 @@ class ExecPlan:
                         ops=tuple(ops), act_density=d["act_density"],
                         value_bits=d["value_bits"],
                         energy_scale=d.get("energy_scale", 1.0),
-                        glb_energy_scale=d.get("glb_energy_scale", 1.0))
+                        glb_energy_scale=d.get("glb_energy_scale", 1.0),
+                        version=version,
+                        checksums=dict(d.get("checksums", {})))
 
     @staticmethod
     def from_json(s: str) -> "ExecPlan":

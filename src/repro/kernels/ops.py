@@ -81,6 +81,35 @@ def pipeline_default(on: bool):
 
 
 # ---------------------------------------------------------------------------
+# Kernel fault hook (deterministic failure injection for robustness tests)
+# ---------------------------------------------------------------------------
+
+_FAULT_HOOK = None
+
+
+@contextlib.contextmanager
+def kernel_fault_hook(fn):
+    """Install a hook called as ``fn(kind)`` at every sparse-kernel dispatch
+    (``kind`` ∈ {"bitmap", "nm"}) — raising from the hook simulates a kernel
+    failure at trace/dispatch time, which is where a real lowering or launch
+    failure surfaces.  The serving dispatchers' ``kernel_guard`` turns such
+    failures into per-role dense fallbacks; :mod:`repro.runtime.inject`
+    builds its ``kernel_failure`` harness on this hook."""
+    global _FAULT_HOOK
+    prev = _FAULT_HOOK
+    _FAULT_HOOK = fn
+    try:
+        yield
+    finally:
+        _FAULT_HOOK = prev
+
+
+def _fault_check(kind: str) -> None:
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK(kind)
+
+
+# ---------------------------------------------------------------------------
 # Jitted-wrapper cache (per-op: repeated layers share one compiled kernel)
 # ---------------------------------------------------------------------------
 
@@ -171,6 +200,7 @@ def bitmap_spmm(x: jax.Array, w: BitmapCompressed, bm: int = 128,
     entries — see the module docstring).  The streaming path ignores
     ``t_max`` (its loop bound is the runtime ``counts[kj]``) but keeps it
     in the key so switching paths never aliases a wrapper."""
+    _fault_check("bitmap")
     if t_max is None:
         t_max = w.max_per_col
     fn = _jitted("bitmap", _bitmap_builder, w.k, bm, max(int(t_max), 1),
@@ -213,6 +243,7 @@ def _nm_builder(n_sel: int, m_group: int, bm: int, bn: int, bk: int,
 
 def nm_spmm(x: jax.Array, w: NMCompressed, bm: int = 128, bn: int = 128,
             bk: int = 128, pipeline: bool | None = None) -> jax.Array:
+    _fault_check("nm")
     fn = _jitted("nm", _nm_builder, w.n_sel, w.m_group, bm, bn, bk,
                  resolve_pipeline(pipeline), _interpret())
     return fn(x, w.values, w.indices)

@@ -63,3 +63,32 @@ def make_serve_mesh(batch: int, model: int = 1) -> Optional[object]:
     if data * model <= 1:
         return None
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def degraded_serve_mesh(batch: int, lost: int, model: int = 1
+                        ) -> Optional[object]:
+    """Serving mesh after losing ``lost`` devices (elastic re-mesh).
+
+    The straggler/fault path: :func:`repro.runtime.fault.elastic_remesh`
+    proposes the largest (data × model) shape the survivors sustain — TP
+    degree pinned, data parallelism shrunk — and the mesh is built over an
+    explicit device subset (the survivors; here simply the first ``avail``
+    devices, since a real deployment passes the cordon list).  Raises
+    ``ValueError`` when the survivors cannot sustain the TP degree;
+    returns ``None`` when the proposal degenerates to one device, the
+    same unsharded path :func:`make_serve_mesh` takes."""
+    import numpy as np
+
+    from repro.runtime.fault import elastic_remesh
+
+    devices = jax.devices()
+    avail = len(devices) - lost
+    if avail < 1:
+        raise ValueError(f"lost {lost} of {len(devices)} devices: "
+                         "nothing left to serve on")
+    data, model = elastic_remesh(avail, model)
+    data = math.gcd(max(batch, 1), data)
+    if data * model <= 1:
+        return None
+    grid = np.array(devices[:data * model]).reshape(data, model)
+    return jax.sharding.Mesh(grid, ("data", "model"))

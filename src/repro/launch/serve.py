@@ -64,14 +64,26 @@ def _generate(model, params, prompts: jax.Array, gen: int, max_len: int):
 
 
 def generate(model, params, prompts: jax.Array, gen: int, max_len: int,
-             mesh=None):
+             mesh=None, guarded: bool = False, **guard_kwargs):
     """Greedy decode for a batch of equal-length prompts.
 
     ``model`` is anything with the serving surface (``prefill`` /
     ``init_cache`` / ``decode_step``): the dense Model or a
     CompressedModel.  Returns (tokens (B, gen), t_prefill_s, t_gen_s).
     With ``mesh``, requests shard over the data axis and the models'
-    logical-axis annotations bind for the whole prefill+decode scope."""
+    logical-axis annotations bind for the whole prefill+decode scope.
+
+    ``guarded=True`` routes through the robustness layer
+    (:func:`repro.runtime.guard.guarded_generate`: store verification,
+    per-role dense demotion, NaN/Inf retry, deadline) and appends the
+    :class:`~repro.runtime.guard.HealthReport` to the return tuple;
+    ``guard_kwargs`` (``verify=``, ``deadline_s=``, ``max_retries=``,
+    ``dense_model=``, ``pad_id=``) pass through."""
+    if guarded:
+        from repro.runtime.guard import guarded_generate
+        toks, report = guarded_generate(model, params, prompts, gen, max_len,
+                                        mesh=mesh, **guard_kwargs)
+        return toks, report.t_prefill_s, report.t_decode_s, report
     if mesh is None:
         return _generate(model, params, prompts, gen, max_len)
     with mesh, logical_axis_rules(axis_map_for(mesh)):
@@ -117,6 +129,13 @@ def main() -> None:
                     help="co-search a plan and serve the compressed store")
     ap.add_argument("--mesh", action="store_true",
                     help="shard the request batch over available devices")
+    ap.add_argument("--guarded", action="store_true",
+                    help="serve through the robustness layer (verify + "
+                         "retry + dense degradation) and print the health "
+                         "report")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request wall-clock budget in seconds "
+                         "(guarded mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -137,9 +156,15 @@ def main() -> None:
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
-    toks, t_prefill, t_gen = generate(
-        model, params, prompts, args.gen, args.prompt_len + args.gen,
-        mesh=mesh)
+    report = None
+    if args.guarded:
+        toks, t_prefill, t_gen, report = generate(
+            model, params, prompts, args.gen, args.prompt_len + args.gen,
+            mesh=mesh, guarded=True, deadline_s=args.deadline)
+    else:
+        toks, t_prefill, t_gen = generate(
+            model, params, prompts, args.gen, args.prompt_len + args.gen,
+            mesh=mesh)
     n_pref = args.batch * args.prompt_len
     n_gen = args.batch * args.gen
     print(f"[serve] {label}: batch={args.batch} devices={ndev}")
@@ -150,6 +175,13 @@ def main() -> None:
           f"({n_gen / t_gen:.1f} tok/s, "
           f"{n_gen / t_gen / ndev:.1f} tok/s/dev)")
     print(f"  sample out: {np.asarray(toks[0, :8])}")
+    if report is not None:
+        print(f"  health: healthy={report.healthy} "
+              f"verify={report.verify or 'skipped'} "
+              f"fallbacks={report.fallback_counts() or 'none'} "
+              f"retries={report.retries} dense_steps={report.dense_steps} "
+              f"deadline_hit={report.deadline_hit} "
+              f"steps={report.steps}/{report.gen}")
 
 
 if __name__ == "__main__":

@@ -95,6 +95,20 @@ def _stack(key, n: int, make) -> PyTree:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
+#: Families the cache/decode machinery knows how to serve.  Anything else
+#: must fail LOUDLY: the decode-path switches below all end in a default
+#: branch, so an unknown family would otherwise silently get the uniform
+#: dense cache and mis-serve instead of raising.
+KNOWN_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid", "encdec")
+
+
+def _check_family(cfg: ModelConfig) -> None:
+    if cfg.family not in KNOWN_FAMILIES:
+        raise ValueError(
+            f"unknown model family {cfg.family!r} for {cfg.name}: cannot "
+            f"build a decode cache (known: {', '.join(KNOWN_FAMILIES)})")
+
+
 def _uniform_stack(cfg: ModelConfig) -> bool:
     """True when the model is one homogeneous scanned attention stack (the
     families prefill / extras-threading support)."""
@@ -377,6 +391,7 @@ class Model:
     def init_cache(self, batch: int, max_len: int) -> PyTree:
         """Zeroed decode caches sized for ``max_len`` context."""
         cfg = self.cfg
+        _check_family(cfg)
         hd, nk = cfg.head_dim, max(cfg.n_kv_heads, 1)
         dt = L.COMPUTE_DTYPE
 
@@ -426,6 +441,7 @@ class Model:
         Returns (logits (B, V), new cache).  ``extras``: optional
         layer-stacked operand pytree riding the scan (see _run_uniform)."""
         cfg = self.cfg
+        _check_family(cfg)
         if extras is not None and not _uniform_stack(cfg):
             raise NotImplementedError(
                 "extras (layer-stacked operands) need a uniform layer stack")

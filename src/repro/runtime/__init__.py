@@ -1,0 +1,25 @@
+"""Serving-runtime robustness: integrity, fault injection, guarded decode.
+
+  * :mod:`repro.runtime.integrity` — payload checksums + structural
+    invariants for the compressed stores (:class:`IntegrityError`);
+  * :mod:`repro.runtime.inject`    — deterministic, seeded fault injection
+    (bit flips, structural corruption, NaN poison, kernel failure);
+  * :mod:`repro.runtime.guard`     — the guarded serving path: verify →
+    demote → retry → degrade to dense, reported as a
+    :class:`HealthReport`;
+  * :mod:`repro.runtime.fault`     — step retry / straggler detection /
+    elastic re-mesh primitives shared with the train plane.
+"""
+
+from repro.runtime.fault import (FailureEvent, StepGuard, StragglerMonitor,
+                                 elastic_remesh)
+from repro.runtime.guard import (HealthReport, NonFiniteError,
+                                 guarded_generate)
+from repro.runtime.integrity import (IntegrityError, checksum_store, verify,
+                                     verify_report)
+
+__all__ = [
+    "FailureEvent", "StepGuard", "StragglerMonitor", "elastic_remesh",
+    "HealthReport", "NonFiniteError", "guarded_generate",
+    "IntegrityError", "checksum_store", "verify", "verify_report",
+]

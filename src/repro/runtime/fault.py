@@ -1,10 +1,12 @@
 """Fault tolerance + straggler mitigation + elastic re-meshing.
 
-Designed for the 1000+-node regime:
+Shared primitives, designed for the 1000+-node regime:
 
-  * :class:`StepGuard` — wraps the train step with bounded retry; on
-    persistent failure restores the last checkpoint and replays the data
-    stream (the pipeline is counter-based, so replay is exact).
+  * :class:`StepGuard` — bounded retry around an effectful step.  In
+    training it restores the last checkpoint and replays the data stream
+    (the pipeline is counter-based, so replay is exact); the guarded
+    serving path (:mod:`repro.runtime.guard`) runs every prefill/decode
+    step through it and degrades to the dense model on exhaustion.
   * :class:`StragglerMonitor` — per-step wall-time EWMA + spike detection;
     in a real deployment the flagged hosts are cordoned and the job
     re-meshed, here it surfaces the decision signal and records events.
@@ -12,6 +14,8 @@ Designed for the 1000+-node regime:
     largest (data × model) mesh that preserves the model axis (TP degree
     must not change — param layout depends on it) and shrinks data
     parallelism; global batch is re-sliced across the new data axis.
+    :func:`repro.launch.mesh.degraded_serve_mesh` builds a serving mesh
+    from the proposal.
 """
 
 from __future__ import annotations

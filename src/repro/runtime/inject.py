@@ -1,0 +1,222 @@
+"""Deterministic fault injection for the compressed serving plane.
+
+Every detection and recovery path in :mod:`repro.runtime.integrity` /
+:mod:`repro.runtime.guard` is exercised by tests through this harness, not
+hoped for.  All corruption is seeded (``np.random.default_rng(seed)``) and
+PURE: store-level injectors return a NEW store sharing the original plan
+(whose recorded checksums are deliberately left stale — that is what
+verification catches); context managers restore state on exit.
+
+Fault classes:
+
+  * :func:`bitflip_payload`      — flip one payload bit (checksum catch);
+  * :func:`poison_payload_nan`   — NaN one payload value (checksum catch,
+    or — with verification off — the guarded decode's non-finite logit
+    guard and dense retry);
+  * :func:`corrupt_structure`    — break a structural invariant (truncated
+    offsets, inflated counts, out-of-range row/N:M indices), caught with
+    no reference digest at all;
+  * :func:`bitflip_stacked`      — same bit-flip against the layer-stacked
+    serving representation;
+  * :func:`poison_activations`   — NaN/Inf a projection's output on the
+    COMPRESSED path only (the dense fallback stays clean, so recovery is
+    observable);
+  * :func:`kernel_failure`       — raise from the sparse-kernel dispatch
+    hook (:func:`repro.kernels.ops.kernel_fault_hook`), simulating a
+    lowering/launch failure the dispatchers' ``kernel_guard`` demotes
+    per role.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+
+def _payload_array(entry) -> np.ndarray:
+    """The consequential payload of a store entry (real blocks only)."""
+    if entry.kind == "bitmap":
+        nnzb = int(np.asarray(entry.data.counts).sum())
+        if nnzb == 0:
+            raise ValueError(f"role {entry.role!r} layer {entry.layer} has "
+                             "an empty payload; nothing to corrupt")
+        return np.array(np.asarray(entry.data.blocks)[:nnzb])
+    if entry.kind == "nm":
+        return np.array(np.asarray(entry.data.values))
+    return np.array(np.asarray(entry.data))
+
+
+def _with_payload(entry, payload: np.ndarray):
+    """``entry`` with its payload replaced (padding re-attached for bitmap)."""
+    if entry.kind == "bitmap":
+        blocks = np.array(np.asarray(entry.data.blocks))
+        blocks[:payload.shape[0]] = payload
+        data = dataclasses.replace(entry.data, blocks=jnp.asarray(blocks))
+    elif entry.kind == "nm":
+        data = dataclasses.replace(entry.data, values=jnp.asarray(payload))
+    else:
+        data = jnp.asarray(payload)
+    return dataclasses.replace(entry, data=data)
+
+
+def _replace_entry(store, key, entry):
+    entries = dict(store.entries)
+    entries[key] = entry
+    return type(store)(store.plan, entries)
+
+
+def _flip_bit(arr: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    flat = arr.reshape(-1).copy()
+    as_bytes = flat.view(np.uint8)
+    bit = int(rng.integers(0, as_bytes.size * 8))
+    as_bytes[bit // 8] ^= np.uint8(1 << (bit % 8))
+    return flat.reshape(arr.shape)
+
+
+def bitflip_payload(store, role: str, layer: int = 0, expert: int = -1,
+                    seed: int = 0):
+    """A new store with ONE seeded bit flipped in (layer, role)'s payload.
+
+    The plan's recorded checksums are untouched, so ``store.verify()``
+    reports ``checksum_mismatch`` for the role."""
+    key = (layer, role, expert)
+    entry = store.entries[key]
+    rng = np.random.default_rng(seed)
+    return _replace_entry(store, key,
+                          _with_payload(entry, _flip_bit(_payload_array(entry),
+                                                         rng)))
+
+
+def poison_payload_nan(store, role: str, layer: int = 0, expert: int = -1,
+                       seed: int = 0):
+    """A new store with one seeded payload value of (layer, role) → NaN.
+
+    Undetectable structurally; with verification skipped, the NaN reaches
+    the logits and the guarded decode's non-finite guard must recover."""
+    key = (layer, role, expert)
+    entry = store.entries[key]
+    payload = _payload_array(entry)
+    if not np.issubdtype(payload.dtype, np.floating):
+        raise ValueError(f"role {role!r} payload is {payload.dtype}, "
+                         "cannot hold NaN")
+    rng = np.random.default_rng(seed)
+    flat = payload.reshape(-1)
+    flat[int(rng.integers(0, flat.size))] = np.nan
+    return _replace_entry(store, key, _with_payload(entry, payload))
+
+
+#: corruption mode → the integrity reason it must be detected as
+STRUCTURAL_MODES = {
+    "truncate_offsets": "offsets_not_cumsum",
+    "inflate_counts": "count_exceeds_blocks",
+    "row_ids_oob": "row_id_out_of_range",
+    "nm_indices_oob": "nm_index_out_of_range",
+}
+
+
+def corrupt_structure(store, role: str, mode: str, layer: int = 0,
+                      expert: int = -1):
+    """A new store with (layer, role)'s METADATA structurally broken.
+
+    These violations are caught by the invariant checks alone — strip the
+    plan's checksums in tests to prove it.  Modes: see
+    :data:`STRUCTURAL_MODES` (keys are modes, values the expected
+    ``IntegrityError.reason``)."""
+    key = (layer, role, expert)
+    entry = store.entries[key]
+    d = entry.data
+    if mode == "truncate_offsets":
+        # a truncated/shifted offset table misaligns against the counts;
+        # off-by-one the tail so the break is consequential for ANY counts
+        # (zeroing the tail is a no-op when the leading counts are zero)
+        offsets = np.array(np.asarray(d.offsets))
+        offsets[-1] += 1
+        data = dataclasses.replace(d, offsets=jnp.asarray(offsets))
+    elif mode == "inflate_counts":
+        counts = np.array(np.asarray(d.counts))
+        counts[0] = d.n // d.bn + 1            # more blocks than grid rows
+        data = dataclasses.replace(d, counts=jnp.asarray(counts))
+    elif mode == "row_ids_oob":
+        row_ids = np.array(np.asarray(d.row_ids))
+        row_ids[0] = d.n // d.bn               # one past the grid
+        data = dataclasses.replace(d, row_ids=jnp.asarray(row_ids))
+    elif mode == "nm_indices_oob":
+        indices = np.array(np.asarray(d.indices))
+        indices.reshape(-1)[0] = d.m_group     # one past the group
+        data = dataclasses.replace(d, indices=jnp.asarray(indices))
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}: "
+                         f"{sorted(STRUCTURAL_MODES)}")
+    return _replace_entry(store, key, dataclasses.replace(entry, data=data))
+
+
+def bitflip_stacked(stacked, role: str, layer: int = 0, seed: int = 0):
+    """A new :class:`StackedStore` with one seeded bit flipped in ``role``'s
+    stacked payload at ``layer`` (within the layer's real, un-padded
+    blocks) — ``stacked.verify()`` must catch the serving representation
+    itself, not just the per-layer store it came from."""
+    sr = stacked.roles[role]
+    rng = np.random.default_rng(seed)
+    data = dict(sr.data)
+    if sr.kind == "bitmap":
+        nnzb = int(np.asarray(data["counts"][layer]).sum())
+        blocks = np.array(np.asarray(data["blocks"]))
+        blocks[layer, :nnzb] = _flip_bit(blocks[layer, :nnzb], rng)
+        data["blocks"] = jnp.asarray(blocks)
+    else:
+        values = np.array(np.asarray(data["values"]))
+        values[layer] = _flip_bit(values[layer], rng)
+        data["values"] = jnp.asarray(values)
+    roles = dict(stacked.roles)
+    roles[role] = dataclasses.replace(sr, data=data)
+    return type(stacked)(plan=stacked.plan, n_layers=stacked.n_layers,
+                         roles=roles)
+
+
+@contextlib.contextmanager
+def poison_activations(role: str, mode: str = "nan"):
+    """Poison one projection role's OUTPUT with NaN/Inf — compressed path
+    only.
+
+    Rebinds :func:`repro.models.layers.proj` so the poison applies only
+    while a dispatch hook is installed (i.e. inside a ``CompressedModel``
+    forward); the dense model — and therefore the guarded serving path's
+    dense retry — computes clean values, making recovery testable."""
+    bad = {"nan": np.nan, "inf": np.inf}[mode]
+    orig = L.proj
+
+    def poisoned(x, w, r):
+        y = orig(x, w, r)
+        if r == role and L._PROJ_HOOK is not None:
+            y = y.at[..., 0].set(jnp.asarray(bad, y.dtype))
+        return y
+
+    L.proj = poisoned
+    try:
+        yield
+    finally:
+        L.proj = orig
+
+
+@contextlib.contextmanager
+def kernel_failure(kinds=("bitmap", "nm"), message: str = "injected kernel "
+                   "failure"):
+    """Make every sparse-kernel dispatch of the given kinds raise.
+
+    Surfaces exactly where a real lowering/launch failure would (the
+    kernel wrapper call, i.e. trace time under jit); with
+    :func:`repro.exec.dispatch.kernel_guard` active the failure demotes
+    the affected roles to dense instead of killing the forward."""
+
+    def hook(kind: str) -> None:
+        if kind in kinds:
+            raise RuntimeError(f"{message}: {kind}")
+
+    with kops.kernel_fault_hook(hook):
+        yield

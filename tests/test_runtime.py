@@ -1,0 +1,548 @@
+"""Robustness-layer tests: integrity, fault injection, guarded degradation.
+
+Contracts pinned here (the PR-8 acceptance gates):
+
+  * ``compress_params`` records per-role content checksums in the plan;
+    the plan — version, checksums, fallbacks — JSON round-trips
+    bit-identically, and a FUTURE schema version fails with a structured
+    :class:`PlanVersionError`, not a ``KeyError``;
+  * every injected fault class is DETECTED: payload bit-flips (per-layer
+    and stacked stores) by checksum, structural corruption by the
+    invariant checks alone (checksums stripped to prove it), NaN
+    activations by the non-finite logit guard, kernel failures by the
+    dispatch guard;
+  * every injected fault class RECOVERS to the correct dense result:
+    guarded greedy decode stays bit-identical to the dense model at fp32
+    on bitmap plans, faults injected or not (dense fallbacks serve the
+    same pruned tree the kernels encode);
+  * the :class:`HealthReport` says exactly what happened, JSON
+    round-trips, and its ``stable_dict`` projection is deterministic —
+    two guarded runs with the same seed diff clean (the CI
+    fault-injection job re-checks this end to end);
+  * the previously train-only fault primitives are live: ``StepGuard``
+    bounded retry, ``StragglerMonitor`` → ``elastic_remesh`` →
+    ``degraded_serve_mesh``;
+  * a killed ``cosearch_multi`` resumes from its ``memo_autosave``
+    snapshot with bit-identical results;
+  * a malformed model family raises a structured error instead of
+    silently serving through the default dense cache path.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import exec as rexec
+from repro.configs import get_config
+from repro.core import memo
+from repro.core import cosearch as cosearch_mod
+from repro.core.arch import ARCH3
+from repro.core.cosearch import CoSearchConfig, cosearch_multi
+from repro.core.engine import EngineConfig
+from repro.core.sparsity import NM, BlockBernoulli
+from repro.core.workload import LLMSpec, build_llm
+from repro.exec.plans import (PLAN_VERSION, ExecPlan, FallbackReason,
+                              PlanVersionError)
+from repro.launch import serve
+from repro.launch.mesh import degraded_serve_mesh
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models.transformer import KNOWN_FAMILIES, Model
+from repro.runtime import fault, inject, integrity
+from repro.runtime.guard import HealthReport, guarded_generate
+
+FAST = CoSearchConfig(objective="edp",
+                      engine=EngineConfig(max_levels=2,
+                                          max_allocs_per_pattern=16),
+                      spatial_top=2, max_pairs=6)
+BLOCK = BlockBernoulli(0.5, 32 * 32)
+
+
+@pytest.fixture()
+def fp32_compute(monkeypatch):
+    monkeypatch.setattr(L, "COMPUTE_DTYPE", jnp.float32)
+    monkeypatch.setattr(attn_mod, "COMPUTE_DTYPE", jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def serving():
+    """(cfg, model, plan, pruned, store) for an all-bitmap plan — built
+    once; the store/plan are never mutated (injectors return new stores)."""
+    cfg = get_config("chatglm3-6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = rexec.build_exec_plan(cfg, BLOCK, tokens=64, search_cfg=FAST,
+                                 value_bits=32)
+    pruned = rexec.prune_params(params, plan, cfg)
+    store = rexec.compress_params(pruned, plan, cfg)
+    return cfg, model, plan, pruned, store
+
+
+@pytest.fixture(scope="module")
+def serving_nm():
+    """Same, for an N:M plan (exercises the nm digest + invariants)."""
+    cfg = get_config("chatglm3-6b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = rexec.build_exec_plan(cfg, NM(2, 4), tokens=64, search_cfg=FAST,
+                                 value_bits=32)
+    pruned = rexec.prune_params(params, plan, cfg)
+    store = rexec.compress_params(pruned, plan, cfg)
+    return cfg, model, plan, pruned, store
+
+
+@pytest.fixture(scope="module")
+def ref_tokens(serving):
+    """Dense greedy reference at fp32 (the recovery target), plus the
+    prompts that produced it — computed once for the whole module."""
+    cfg, model, plan, pruned, store = serving
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    orig_l, orig_a = L.COMPUTE_DTYPE, attn_mod.COMPUTE_DTYPE
+    L.COMPUTE_DTYPE = attn_mod.COMPUTE_DTYPE = jnp.float32
+    try:
+        toks, _, _ = serve.generate(model, pruned, prompts, 4, 12)
+    finally:
+        L.COMPUTE_DTYPE, attn_mod.COMPUTE_DTYPE = orig_l, orig_a
+    return prompts, toks
+
+
+def _bitmap_role(plan) -> str:
+    return next(op.role for op in plan.ops if op.choice.kind == "bitmap")
+
+
+def _strip_checksums(store):
+    return rexec.CompressedStore(
+        dataclasses.replace(store.plan, checksums={}), store.entries)
+
+
+# ---------------------------------------------------------------------------
+# checksums + plan schema
+# ---------------------------------------------------------------------------
+
+def test_checksums_recorded_and_plan_roundtrips(serving):
+    cfg, model, plan_in, pruned, store = serving
+    plan = store.plan
+    assert plan.version == PLAN_VERSION
+    assert set(plan.checksums) == {op.role for op in plan.ops}
+    assert all(len(h) == 64 for h in plan.checksums.values())   # sha256 hex
+    # the input plan object is untouched (compress returns a NEW plan)
+    assert plan_in.checksums == {}
+
+    rt = ExecPlan.from_json(plan.to_json())
+    assert rt == plan
+    assert rt.checksums == plan.checksums and rt.version == PLAN_VERSION
+
+
+def test_verify_ok_on_clean_store_and_stacked(serving):
+    cfg, model, plan, pruned, store = serving
+    assert set(store.verify().values()) == {"ok"}
+    cm = rexec.CompressedModel(model, store)
+    stacked_ok = cm.stacked.verify()
+    assert stacked_ok and set(stacked_ok.values()) == {"ok"}
+    combined = cm.verify()
+    assert set(combined) == set(store.verify())
+    assert integrity.verify_report(store) == {r: "ok" for r in combined}
+
+
+def test_future_plan_version_is_a_structured_error(serving):
+    d = serving[4].plan.to_dict()
+    d["version"] = PLAN_VERSION + 1
+    d.pop("ops")    # version must be checked BEFORE any field access
+    with pytest.raises(PlanVersionError) as ei:
+        ExecPlan.from_dict(d)
+    assert ei.value.found == PLAN_VERSION + 1
+    assert ei.value.supported == PLAN_VERSION
+    assert isinstance(ei.value, ValueError)
+    assert str(PLAN_VERSION + 1) in str(ei.value)
+
+
+def test_v1_plan_without_version_key_still_loads(serving):
+    d = serving[4].plan.to_dict()
+    del d["version"]
+    del d["checksums"]
+    p1 = ExecPlan.from_dict(d)
+    assert p1.version == 1 and p1.checksums == {}
+    # the declared version survives its own round trip (no silent upgrade)
+    assert json.loads(p1.to_json())["version"] == 1
+    assert ExecPlan.from_json(p1.to_json()) == p1
+    # and a v1 store (no recorded digests) still gets structure checks
+    assert set(_strip_checksums(serving[4]).verify().values()) == {"ok"}
+
+
+def test_fallback_reason_json_roundtrip(serving):
+    plan = serving[4].plan
+    fb = FallbackReason("kernel_failure", "injected: bitmap")
+    op0 = plan.ops[0]
+    bad = dataclasses.replace(
+        op0, choice=dataclasses.replace(op0.choice, fallback=fb))
+    plan2 = dataclasses.replace(plan, ops=(bad,) + plan.ops[1:])
+    rt = ExecPlan.from_json(plan2.to_json())
+    assert rt == plan2
+    assert rt.fallbacks()[op0.role] == fb
+    assert rt.fallback_counts() == {"kernel_failure": 1}
+
+
+# ---------------------------------------------------------------------------
+# fault injection → detection
+# ---------------------------------------------------------------------------
+
+def test_bitflip_payload_detected_by_checksum(serving):
+    cfg, model, plan, pruned, store = serving
+    role = _bitmap_role(plan)
+    bad = inject.bitflip_payload(store, role, seed=3)
+    assert store.verify()     # the original is untouched
+    with pytest.raises(integrity.IntegrityError) as ei:
+        bad.verify()
+    assert ei.value.role == role
+    assert ei.value.reason == "checksum_mismatch"
+    rep = integrity.verify_report(bad)
+    assert rep[role] == "checksum_mismatch"
+    assert all(v == "ok" for r, v in rep.items() if r != role)
+
+
+def test_bitflip_stacked_detected(serving):
+    cfg, model, plan, pruned, store = serving
+    role = _bitmap_role(plan)
+    cm = rexec.CompressedModel(model, store)
+    bad = inject.bitflip_stacked(cm.stacked, role)
+    with pytest.raises(integrity.IntegrityError) as ei:
+        bad.verify()
+    assert ei.value.role == role
+    assert ei.value.reason == "checksum_mismatch"
+
+
+@pytest.mark.parametrize("mode",
+                         [m for m in inject.STRUCTURAL_MODES
+                          if m != "nm_indices_oob"])
+def test_structural_corruption_detected_without_checksums(serving, mode):
+    """Structural breaks must be caught by the invariants ALONE — strip
+    the recorded digests so a checksum match can't mask a weak check."""
+    cfg, model, plan, pruned, store = serving
+    role = _bitmap_role(plan)
+    bad = inject.corrupt_structure(_strip_checksums(store), role, mode)
+    with pytest.raises(integrity.IntegrityError) as ei:
+        bad.verify()
+    assert ei.value.reason == inject.STRUCTURAL_MODES[mode]
+    assert ei.value.role == role and ei.value.layer == 0
+
+
+def test_nm_corruption_detected(serving_nm):
+    cfg, model, plan, pruned, store = serving_nm
+    role = next(op.role for op in plan.ops if op.choice.kind == "nm")
+    bad = inject.corrupt_structure(_strip_checksums(store), role,
+                                   "nm_indices_oob")
+    with pytest.raises(integrity.IntegrityError) as ei:
+        bad.verify()
+    assert ei.value.reason == "nm_index_out_of_range"
+    flipped = inject.bitflip_payload(store, role, seed=1)
+    with pytest.raises(integrity.IntegrityError) as ei:
+        flipped.verify()
+    assert ei.value.reason == "checksum_mismatch"
+    assert set(store.verify().values()) == {"ok"}
+
+
+def test_unknown_corruption_mode_rejected(serving):
+    with pytest.raises(ValueError, match="unknown corruption mode"):
+        inject.corrupt_structure(serving[4], _bitmap_role(serving[2]),
+                                 "melt_the_weights")
+
+
+# ---------------------------------------------------------------------------
+# guarded serving: no-fault baseline
+# ---------------------------------------------------------------------------
+
+def test_guarded_bit_identical_to_dense_when_healthy(fp32_compute, serving,
+                                                     ref_tokens):
+    """Acceptance: the guarded path changes NOTHING when nothing is wrong
+    — tokens bit-identical to dense greedy decode, report clean."""
+    cfg, model, plan, pruned, store = serving
+    prompts, toks_d = ref_tokens
+    cm = rexec.CompressedModel(model, store)
+    toks, rep = guarded_generate(cm, pruned, prompts, 4)
+    assert bool(jnp.all(toks == toks_d))
+    assert rep.healthy
+    assert set(rep.verify.values()) == {"ok"}
+    assert rep.fallbacks == [] and rep.retries == 0 and rep.dense_steps == 0
+    assert rep.switched_to_dense_at is None
+    assert rep.steps == rep.gen == 4
+    assert rep.t_total_s >= rep.t_prefill_s + rep.t_decode_s > 0
+
+
+def test_serve_generate_guarded_passthrough(fp32_compute, serving,
+                                            ref_tokens):
+    cfg, model, plan, pruned, store = serving
+    prompts, toks_d = ref_tokens
+    cm = rexec.CompressedModel(model, store)
+    out = serve.generate(cm, pruned, prompts, 4, 12, guarded=True)
+    assert len(out) == 4
+    toks, t_pref, t_gen, rep = out
+    assert isinstance(rep, HealthReport)
+    assert bool(jnp.all(toks == toks_d))
+    assert t_pref == rep.t_prefill_s and t_gen == rep.t_decode_s
+
+
+def test_guarded_two_runs_are_deterministic(fp32_compute, serving,
+                                            ref_tokens):
+    """What the CI fault-injection job diffs: same seed → same tokens AND
+    the same stable_dict projection."""
+    cfg, model, plan, pruned, store = serving
+    prompts, _ = ref_tokens
+    cm = rexec.CompressedModel(model, store)
+    toks1, rep1 = guarded_generate(cm, pruned, prompts, 4)
+    toks2, rep2 = guarded_generate(cm, pruned, prompts, 4)
+    assert bool(jnp.all(toks1 == toks2))
+    assert rep1.stable_dict() == rep2.stable_dict()
+    assert "t_decode_s" not in rep1.stable_dict()
+    assert "t_decode_s" in rep1.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# guarded serving: every fault class recovers to the dense result
+# ---------------------------------------------------------------------------
+
+def test_guarded_verify_demotes_corrupt_role(fp32_compute, serving,
+                                             ref_tokens):
+    """A checksum-failing role is served from dense weights; the rest of
+    the store keeps its kernels.  Result: still bit-identical to dense."""
+    cfg, model, plan, pruned, store = serving
+    prompts, toks_d = ref_tokens
+    role = _bitmap_role(plan)
+    cm = rexec.CompressedModel(model, inject.bitflip_payload(store, role))
+    toks, rep = guarded_generate(cm, pruned, prompts, 4)
+    assert bool(jnp.all(toks == toks_d))
+    assert rep.verify[role] == "checksum_mismatch"
+    assert rep.fallback_counts() == {"integrity_violation": 1}
+    assert rep.fallbacks[0]["role"] == role
+    assert not rep.healthy
+    # degraded, not dead: the whole generation still ran compressed
+    assert rep.switched_to_dense_at is None and rep.dense_steps == 0
+
+
+def test_guarded_recovers_nan_payload_without_verify(fp32_compute, serving,
+                                                     ref_tokens):
+    """Verification off (or a fault past it): the NaN reaches the logits,
+    the step guard retries, then the request degrades to the dense model
+    — which computes the CORRECT tokens from the pruned tree."""
+    cfg, model, plan, pruned, store = serving
+    prompts, toks_d = ref_tokens
+    role = _bitmap_role(plan)
+    cm = rexec.CompressedModel(model, inject.poison_payload_nan(store, role))
+    toks, rep = guarded_generate(cm, pruned, prompts, 4, verify=False)
+    assert bool(jnp.all(toks == toks_d))
+    assert rep.switched_to_dense_at == -1       # poisoned from prefill on
+    assert rep.dense_steps == 4
+    assert rep.retries >= 1
+    assert rep.fallback_counts() == {"nonfinite_logits": 1}
+    assert rep.verify == {}                     # verification was skipped
+
+
+def test_guarded_recovers_kernel_failure(fp32_compute, serving, ref_tokens):
+    """Kernel dispatch failures demote per role at trace time (the
+    ``kernel_guard`` sink) — the forward completes dense, bit-identical."""
+    cfg, model, plan, pruned, store = serving
+    prompts, toks_d = ref_tokens
+    cm = rexec.CompressedModel(model, store)
+    with inject.kernel_failure():
+        toks, rep = guarded_generate(cm, pruned, prompts, 4)
+    assert bool(jnp.all(toks == toks_d))
+    codes = rep.fallback_counts()
+    assert set(codes) == {"kernel_failure"}
+    kernel_roles = {op.role for op in plan.ops
+                    if op.choice.kind in ("bitmap", "nm")}
+    assert {f["role"] for f in rep.fallbacks} == kernel_roles
+    assert rep.switched_to_dense_at is None     # per-role, not whole-step
+
+
+def test_guarded_recovers_activation_poison(fp32_compute, serving,
+                                            ref_tokens):
+    cfg, model, plan, pruned, store = serving
+    prompts, toks_d = ref_tokens
+    cm = rexec.CompressedModel(model, store)
+    with inject.poison_activations("ffn.w_up"):
+        toks, rep = guarded_generate(cm, pruned, prompts, 4)
+    assert bool(jnp.all(toks == toks_d))
+    assert rep.fallback_counts() == {"nonfinite_logits": 1}
+    assert rep.dense_steps == 4
+
+
+def test_guarded_deadline_pads_and_reports(fp32_compute, serving,
+                                           ref_tokens):
+    cfg, model, plan, pruned, store = serving
+    prompts, _ = ref_tokens
+    cm = rexec.CompressedModel(model, store)
+    toks, rep = guarded_generate(cm, pruned, prompts, 4, deadline_s=0.0,
+                                 pad_id=-7)
+    assert rep.deadline_hit and not rep.healthy
+    assert rep.steps < rep.gen == 4
+    assert toks.shape == (2, 4)
+    assert bool(jnp.all(toks[:, rep.steps:] == -7))
+    assert rep.fallback_counts()["deadline_exceeded"] == 1
+
+
+def test_demoted_roles_fall_through_to_dense(fp32_compute, serving,
+                                             ref_tokens):
+    """``CompressedModel.demoted`` drops the roles' store entries, so the
+    dispatcher's dense einsum serves them from the pruned tree — still
+    bit-identical (the mechanism the integrity demotion relies on)."""
+    cfg, model, plan, pruned, store = serving
+    prompts, toks_d = ref_tokens
+    role = _bitmap_role(plan)
+    cm = rexec.CompressedModel(model, store).demoted([role])
+    assert all(key[1] != role for key in cm.store.entries)
+    toks, _, _ = cm.generate(pruned, prompts, 4)
+    assert bool(jnp.all(toks == toks_d))
+
+
+def test_health_report_json_roundtrip():
+    rep = HealthReport(verify={"attn.wq": "ok"}, retries=2, dense_steps=3,
+                       switched_to_dense_at=-1, deadline_hit=True, steps=3,
+                       gen=8, t_prefill_s=0.5, t_decode_s=1.5, t_total_s=2.0)
+    rep.record_fallback("attn.wq", "integrity_violation",
+                        detail="checksum_mismatch", layer=1)
+    rt = HealthReport.from_json(rep.to_json())
+    assert rt == rep
+    assert not rep.healthy
+    assert rep.fallback_counts() == {"integrity_violation": 1}
+    assert rep.fallback_reasons() == [
+        FallbackReason("integrity_violation", "checksum_mismatch")]
+    assert rep.latency_per_token_s == pytest.approx(0.5)
+    assert HealthReport().healthy
+
+
+# ---------------------------------------------------------------------------
+# malformed cache family: loud, not silently mis-served
+# ---------------------------------------------------------------------------
+
+def test_unknown_family_raises_instead_of_default_cache(serving):
+    """The token-by-token ingest fallback must NOT serve an unknown family
+    through the default dense cache path."""
+    cfg, model, plan, pruned, store = serving
+    assert "dense" in KNOWN_FAMILIES
+    bad_model = Model(dataclasses.replace(cfg, family="bogus"))
+    prompts = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="bogus"):
+        serve.generate(bad_model, pruned, prompts, 2, 6)
+    with pytest.raises(ValueError, match="bogus"):
+        bad_model.init_cache(1, 6)
+
+
+# ---------------------------------------------------------------------------
+# fault primitives, live
+# ---------------------------------------------------------------------------
+
+def test_step_guard_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return 42
+
+    g = fault.StepGuard(max_retries=2)
+    assert g.run(7, flaky) == 42
+    assert [e.action for e in g.events] == ["retry"]
+    assert g.events[0].step == 7 and "transient" in g.events[0].error
+
+
+def test_step_guard_exhaustion_paths():
+    def failing():
+        raise RuntimeError("persistent")
+
+    g = fault.StepGuard(max_retries=1, on_restore=lambda: None)
+    assert g.run(0, failing) is None
+    assert [e.action for e in g.events] == ["retry", "restore"]
+    g2 = fault.StepGuard(max_retries=0)
+    with pytest.raises(RuntimeError, match="persistent"):
+        g2.run(0, failing)
+
+
+def test_straggler_monitor_flags_persistent_spikes():
+    mon = fault.StragglerMonitor(warmup=3)
+    for s in range(3):
+        assert not mon.observe(s, 0.1)
+    assert not mon.should_remesh(tolerance=5)
+    for s in range(3, 9):
+        assert mon.observe(s, 1.0)          # 10× spikes flagged
+    assert mon.should_remesh(window=20, tolerance=5)
+    assert not mon.should_remesh(window=1, tolerance=5)
+
+
+def test_elastic_remesh_proposals():
+    assert fault.elastic_remesh(8, 2) == (4, 2)
+    assert fault.elastic_remesh(7, 2) == (3, 2)          # odd survivor count
+    assert fault.elastic_remesh(256, 16, pod_size=128) == (2, 8, 16)
+    with pytest.raises(ValueError):
+        fault.elastic_remesh(1, 2)                       # TP is pinned
+
+
+def test_degraded_serve_mesh():
+    ndev = len(jax.devices())
+    with pytest.raises(ValueError, match="nothing left"):
+        degraded_serve_mesh(4, lost=ndev)
+    with pytest.raises(ValueError):
+        degraded_serve_mesh(4, lost=0, model=ndev + 1)   # TP > survivors
+    mesh = degraded_serve_mesh(4, lost=0)
+    if ndev == 1:
+        assert mesh is None        # degenerates to the unsharded path
+    else:
+        assert mesh is not None
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        assert sizes["model"] == 1 and 4 % sizes["data"] == 0
+        lost_one = degraded_serve_mesh(4, lost=1)
+        if lost_one is not None:
+            assert int(np.prod(lost_one.devices.shape)) <= ndev - 1
+
+
+# ---------------------------------------------------------------------------
+# co-search checkpointing: kill + resume is bit-identical
+# ---------------------------------------------------------------------------
+
+def test_cosearch_autosave_resume_bit_identical(tmp_path, monkeypatch):
+    wl_a = build_llm(LLMSpec("A", 1, 128, 512, 4), seq=32,
+                     act_density=0.2, w_density=0.2)
+    wl_b = build_llm(LLMSpec("B", 1, 128, 512, 4), seq=32,
+                     act_density=0.8, w_density=0.8)
+    cfg = dataclasses.replace(FAST, max_pairs=4)
+    kw = dict(arch=ARCH3, importance={"A": 2.0, "B": 1.0}, cfg=cfg)
+    path = str(tmp_path / "cosearch_autosave.pkl")
+
+    memo.clear()
+    ref_designs, ref_key, ref_val = cosearch_multi([wl_a, wl_b], **kw)
+
+    # interrupted run from cold: die after 3 work items, autosaving after
+    # every completed item
+    memo.clear()
+    real = cosearch_mod._multi_work_item
+    calls = {"n": 0}
+
+    def dying(item):
+        calls["n"] += 1
+        if calls["n"] > 3:
+            raise RuntimeError("simulated kill")
+        return real(item)
+
+    monkeypatch.setattr(cosearch_mod, "_multi_work_item", dying)
+    with pytest.raises(RuntimeError, match="simulated kill"):
+        cosearch_multi([wl_a, wl_b], memo_autosave=path, autosave_every=1,
+                       **kw)
+    monkeypatch.setattr(cosearch_mod, "_multi_work_item", real)
+    assert os.path.exists(path)
+
+    # "fresh process": cold registry + snapshot load, then the same call —
+    # completed items replay from the memo, results are bit-identical
+    memo.clear()
+    assert memo.load(path)
+    designs, key, val = cosearch_multi([wl_a, wl_b], memo_autosave=path,
+                                       autosave_every=1, **kw)
+    assert key == ref_key and val == ref_val
+    assert set(designs) == set(ref_designs)
+    for name in ref_designs:
+        assert designs[name].design == ref_designs[name].design
+        assert designs[name].evaluations == ref_designs[name].evaluations
