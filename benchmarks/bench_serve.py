@@ -27,6 +27,14 @@ Rows (us_per_call = warm wall-clock of the phase):
     vs the plain driver on the same healthy store, whole-generation
     decode seconds per token, plus the health summary and a token-
     equality check (guarded must change nothing when nothing is wrong).
+  * ``serve_mixer_vs_static``           — continuous batching: a
+    mixed-length request stream through the compressed plane's
+    :class:`repro.launch.mixer.Mixer` (admit/evict into a running decode
+    batch) vs the same requests as static lockstep chunks (left-padded,
+    each chunk decoding to its longest budget).  Useful-token decode
+    throughput for both, the ratio, and the structural win: the mixer
+    refills freed slots instead of burning lockstep steps past short
+    requests' budgets.
 
 Dense rows serve the SAME pruned weight tree the compressed store was
 built from, so the comparison isolates the execution path.  With more
@@ -84,6 +92,12 @@ def _first_and_warm(fn, *args):
     t1 = time.perf_counter()
     jax.block_until_ready(fn(*args))
     return t_first, time.perf_counter() - t1
+
+
+def _rate(n: float, t: float) -> float:
+    """n / t with a denominator floor — a quick run can time a warm phase
+    at ~0s, which must not blow up the report."""
+    return n / max(t, 1e-9)
 
 
 def run(quick: bool = False) -> None:
@@ -144,12 +158,12 @@ def run(quick: bool = False) -> None:
                              f" kcache=h{kc['hits']}/m{kc['misses']}"
                              f"/e{kc['entries']}")
                 emit(f"serve_prefill_{label}_b{b}", t_prefill * 1e6,
-                     f"tok/s={b * plen / t_prefill:.0f} "
-                     f"tok/s/dev={b * plen / t_prefill / ndev:.0f} "
+                     f"tok/s={_rate(b * plen, t_prefill):.0f} "
+                     f"tok/s/dev={_rate(b * plen, t_prefill) / ndev:.0f} "
                      f"plen={plen} ndev={ndev}{extra}")
                 emit(f"serve_decode_{label}_b{b}", t_step * 1e6,
-                     f"tok/s={b / t_step:.0f} "
-                     f"tok/s/dev={b / t_step / ndev:.0f} "
+                     f"tok/s={_rate(b, t_step):.0f} "
+                     f"tok/s/dev={_rate(b, t_step) / ndev:.0f} "
                      f"gen={gen} ndev={ndev}{extra}")
 
     # memory-pipeline row: the SAME scanned compressed forward with the
@@ -181,8 +195,8 @@ def run(quick: bool = False) -> None:
          f"scan_trace_ms={scan_first * 1e3:.0f} "
          f"unrolled_trace_ms={unr_first * 1e3:.0f} "
          f"unrolled_warm_us={unr_warm * 1e6:.0f} layers={cfg.n_layers} "
-         f"speedup_trace={unr_first / scan_first:.2f}x "
-         f"speedup_warm={unr_warm / scan_warm:.2f}x")
+         f"speedup_trace={_rate(unr_first, scan_first):.2f}x "
+         f"speedup_warm={_rate(unr_warm, scan_warm):.2f}x")
 
     # robustness row: the guarded serving path vs the plain driver on the
     # same healthy store.  Both drivers re-jit their decode step per
@@ -204,6 +218,61 @@ def run(quick: bool = False) -> None:
          f"retries={report.retries} "
          f"fallbacks={report.fallback_counts() or 'none'} "
          f"tokens_match={bool(jnp.all(toks_u == toks_g))}")
+
+    # continuous-batching row: a mixed-length request stream through the
+    # mixer vs the SAME requests served as static lockstep chunks.
+    # Budgets alternate short/long so lockstep burns steps past the short
+    # requests; the mixer refills those slots instead.  The mixer's decode
+    # trace is warmed by a throwaway stream (its jitted step is per-Mixer);
+    # the static driver re-jits per generate() call, the same caveat as
+    # the guarded row above.
+    from repro.launch.mixer import Mixer, Request
+    slots = 2 if quick else 4
+    n_req = 4 if quick else 8
+    budgets = [gen if i % 2 else max(2, gen // 4) for i in range(n_req)]
+    plens = [max(1, plen - (i % 4) * (plen // 5)) for i in range(n_req)]
+    max_len = plen + gen + 1
+    PAD = 0  # prompt pad id: prompts below draw from [1, vocab)
+
+    def stream(tag):
+        return [Request(uid=f"{tag}{i}",
+                        prompt=jnp.asarray(rng.integers(
+                            1, cfg.vocab, (plens[i],)), jnp.int32),
+                        max_new=budgets[i])
+                for i in range(n_req)]
+
+    mx = Mixer(cm, pruned, slots=slots, max_len=max_len)
+    mx.run(stream("warm"))                       # warm decode/prefill traces
+    s0 = mx.stats()
+    reqs = stream("req")
+    mx.run(reqs)
+    s1 = mx.stats()
+    mix_tok = s1["tokens"] - s0["tokens"]
+    mix_t = s1["t_decode_s"] - s0["t_decode_s"]
+    mix_steps = s1["steps"] - s0["steps"]
+
+    stat_tok, stat_t, stat_steps = 0, 0.0, 0
+    for c0 in range(0, n_req, slots):
+        idx = list(range(c0, min(c0 + slots, n_req)))
+        cp = max(plens[i] for i in idx)
+        cg = max(budgets[i] for i in idx)
+        rows = [np.concatenate([np.full(cp - plens[i], PAD, np.int32),
+                                np.asarray(reqs[i].prompt)]) for i in idx]
+        batch = jnp.asarray(np.stack(rows))
+        _, _, t_g = serve_mod.generate(cm, pruned, batch, cg, max_len,
+                                       prompt_pad_id=PAD)
+        stat_t += t_g
+        stat_tok += sum(budgets[i] for i in idx)   # useful tokens only
+        stat_steps += cg
+    mix_rate = _rate(mix_tok, mix_t)
+    stat_rate = _rate(stat_tok, stat_t)
+    emit("serve_mixer_vs_static", mix_t / max(mix_tok, 1) * 1e6,
+         f"mixer_tok_s={mix_rate:.0f} static_tok_s={stat_rate:.0f} "
+         f"mixer/static={_rate(mix_rate, stat_rate):.2f}x "
+         f"tok/s/dev={mix_rate / ndev:.0f} "
+         f"slots={slots} requests={n_req} "
+         f"mixer_steps={mix_steps} static_steps={stat_steps} "
+         f"slot_reuse_admits={s1['slot_reuse_admits'] - s0['slot_reuse_admits']}")
 
 
 if __name__ == "__main__":

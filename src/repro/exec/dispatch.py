@@ -410,7 +410,9 @@ class CompressedModel:
 
     def decode_step(self, params, cache, tokens: jax.Array, pos: jax.Array):
         """One compressed decode token for the whole batch — same contract
-        as :meth:`repro.models.transformer.Model.decode_step`."""
+        as :meth:`repro.models.transformer.Model.decode_step`.  ``pos`` may
+        be a scalar (lockstep batch) or a per-slot ``(B,)`` vector (the
+        continuous-batching mixer / ragged-prompt serving)."""
         with active_stacked(self.stacked):
             return self.model.decode_step(params, cache, tokens, pos,
                                           extras=self.stacked.extras())
@@ -425,3 +427,14 @@ class CompressedModel:
         if max_len is None:
             max_len = prompts.shape[1] + gen
         return serve.generate(self, params, prompts, gen, max_len, **kwargs)
+
+    def serve_mixed(self, params, requests, *, slots: int,
+                    max_len: int, **kwargs):
+        """Continuous-batching serve of a request STREAM over the
+        compressed plane (delegates to :class:`repro.launch.mixer.Mixer`,
+        same as :meth:`generate` delegates to the static driver).  Returns
+        ``(results, mixer)`` — per-request :class:`RequestResult`\\ s in
+        request order plus the drained mixer (events / stats)."""
+        from repro.launch.mixer import Mixer
+        mx = Mixer(self, params, slots=slots, max_len=max_len, **kwargs)
+        return mx.run(requests), mx

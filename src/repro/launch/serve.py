@@ -6,12 +6,20 @@ per-phase tokens/sec(/device) reporting and optional mesh sharding.
 :func:`generate` prefers the batched ``prefill`` path (one compiled
 full-sequence forward fills the whole cache); families without it — ring
 windows, hybrid/SSM/encdec states — keep the exact token-by-token decode
-ingest.  With a mesh (``make_serve_mesh``), the request batch shards over
-the data axis and the model zoo's logical-axis annotations bind to it.
+ingest.  LEFT-padded ragged prompts are supported via ``prompt_pad_id``
+(each row is prefilled alone at its real length and decoded with a
+per-row position vector — the mixer's admission primitive); ``eos_id``
+stops decode early once every row has emitted EOS, padding the tail with
+``pad_id``.  With a mesh (``make_serve_mesh``), the request batch shards
+over the data axis and the model zoo's logical-axis annotations bind to
+it.  For continuous batching over a request STREAM (admit/evict into a
+running decode batch, sampled decoding) see :mod:`repro.launch.mixer` and
+the ``--mixer`` CLI mode.
 
 CPU quickstart (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --reduced \
-      --batch 4 --prompt-len 32 --gen 16 [--compressed] [--mesh]
+      --batch 4 --prompt-len 32 --gen 16 [--compressed] [--mesh] \
+      [--mixer --slots 2 --temperature 0.8 --top-k 20 --eos 7]
 """
 
 from __future__ import annotations
@@ -31,65 +39,154 @@ from repro.models.sharding import logical_axis_rules, named_sharding
 from repro.models.transformer import Model
 
 
-def _generate(model, params, prompts: jax.Array, gen: int, max_len: int):
+def _rate(n: float, t: float) -> float:
+    """tokens / seconds with a floor on the denominator: a tiny
+    ``--reduced --gen 1`` run can legitimately time ~0s, which must not
+    turn the report into a ZeroDivisionError (or an inf row)."""
+    return n / max(t, 1e-9)
+
+
+def _prompt_offsets(prompts: jax.Array, prompt_pad_id: Optional[int]
+                    ) -> np.ndarray:
+    """Per-row first-real-token offsets of a LEFT-padded prompt batch.
+
+    With ``prompt_pad_id`` None every prompt is taken as unpadded (offset
+    0).  Otherwise each row must be ``[pad... real...]`` with at least one
+    real token — pads after the first real token (right/interior padding)
+    are rejected loudly instead of silently mis-positioning the row."""
     b, plen = prompts.shape
+    if prompt_pad_id is None:
+        return np.zeros(b, np.int64)
+    pn = np.asarray(prompts)
+    real = pn != prompt_pad_id
+    offsets = np.argmax(real, axis=1)
+    for r in range(b):
+        if not real[r].any():
+            raise ValueError(f"prompt row {r} is all padding "
+                             f"(pad_id={prompt_pad_id})")
+        if not real[r, offsets[r]:].all():
+            raise ValueError(
+                f"prompt row {r} has pad tokens after its first real "
+                f"token; prompts must be LEFT-padded (pad_id="
+                f"{prompt_pad_id})")
+    return offsets
+
+
+def _generate(model, params, prompts: jax.Array, gen: int, max_len: int,
+              eos_id: Optional[int] = None, pad_id: int = -1,
+              prompt_pad_id: Optional[int] = None):
+    b, plen = prompts.shape
+    if plen > max_len or plen + gen > max_len:
+        raise ValueError(f"prompt ({plen}) + gen ({gen}) exceeds "
+                         f"max_len ({max_len})")
+    offsets = _prompt_offsets(prompts, prompt_pad_id)
     step = jax.jit(model.decode_step, donate_argnums=(1,))
 
     t0 = time.perf_counter()
-    try:
-        prefill = jax.jit(functools.partial(model.prefill, max_len=max_len))
-        all_logits, cache = prefill(params, prompts)
-        logits = all_logits[:, -1]
-        jax.block_until_ready(logits)
-    except NotImplementedError:
-        # ring windows / hybrid / ssm / encdec: exact decode-path ingest
+    if offsets.any():
+        # ragged left-padded rows: admit each row alone at its REAL length
+        # (batch-1 prefill or exact token ingest) into its slot of the
+        # shared cache, then decode with a per-row position vector — the
+        # continuous-batching admission primitive (launch.mixer)
+        from repro.launch import mixer as mixer_mod
         cache = model.init_cache(b, max_len)
-        logits = None
-        for t in range(plen):
-            logits, cache = step(params, cache, prompts[:, t],
-                                 jnp.asarray(t, jnp.int32))
+        write = jax.jit(mixer_mod.write_slot, donate_argnums=(0,))
+        lasts = []
+        for r in range(b):
+            last, rcache = mixer_mod.prefill_request(
+                model, params, prompts[r:r + 1, int(offsets[r]):], max_len)
+            cache = write(cache, rcache, jnp.asarray(r, jnp.int32))
+            lasts.append(last)
+        logits = jnp.stack(lasts)
+        pos = jnp.asarray(plen - offsets, jnp.int32)       # per-row (B,)
         jax.block_until_ready(logits)
+    else:
+        pos = None                                         # lockstep scalar
+        try:
+            prefill = jax.jit(functools.partial(model.prefill,
+                                                max_len=max_len))
+            all_logits, cache = prefill(params, prompts)
+            logits = all_logits[:, -1]
+            jax.block_until_ready(logits)
+        except NotImplementedError:
+            # ring windows / hybrid / ssm / encdec: exact decode-path ingest
+            cache = model.init_cache(b, max_len)
+            logits = None
+            for t in range(plen):
+                logits, cache = step(params, cache, prompts[:, t],
+                                     jnp.asarray(t, jnp.int32))
+            jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
     out = []
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    done = np.zeros(b, bool)              # rows that already emitted EOS
     t1 = time.perf_counter()
-    for t in range(plen, plen + gen):
-        out.append(tok)
-        logits, cache = step(params, cache, tok, jnp.asarray(t, jnp.int32))
+    for i, t in enumerate(range(plen, plen + gen)):
+        if eos_id is None:
+            out.append(tok)
+        else:
+            # a row's EOS token is emitted; everything after it holds
+            # pad_id, and once EVERY row is done the remaining steps are
+            # skipped instead of decoded and thrown away
+            out.append(jnp.where(jnp.asarray(done), pad_id, tok))
+            done |= np.asarray(tok) == eos_id
+            if done.all():
+                break
+        cur = jnp.asarray(t, jnp.int32) if pos is None else pos + i
+        logits, cache = step(params, cache, tok, cur)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    jax.block_until_ready(logits)
+    jax.block_until_ready(out[-1] if out else logits)
     t_gen = time.perf_counter() - t1
+    if len(out) < gen:
+        pad = jnp.full((b,), pad_id, jnp.int32)
+        out.extend([pad] * (gen - len(out)))
     return jnp.stack(out, axis=1), t_prefill, t_gen
 
 
 def generate(model, params, prompts: jax.Array, gen: int, max_len: int,
-             mesh=None, guarded: bool = False, **guard_kwargs):
-    """Greedy decode for a batch of equal-length prompts.
+             mesh=None, guarded: bool = False,
+             eos_id: Optional[int] = None, pad_id: int = -1,
+             prompt_pad_id: Optional[int] = None, **guard_kwargs):
+    """Greedy decode for a batch of prompts.
 
     ``model`` is anything with the serving surface (``prefill`` /
     ``init_cache`` / ``decode_step``): the dense Model or a
     CompressedModel.  Returns (tokens (B, gen), t_prefill_s, t_gen_s).
-    With ``mesh``, requests shard over the data axis and the models'
-    logical-axis annotations bind for the whole prefill+decode scope.
+    Prompts are equal-length by default; pass ``prompt_pad_id`` to serve
+    LEFT-padded ragged rows (each row prefills alone at its real length
+    and decodes at its own position).  ``eos_id`` ends rows early — the
+    EOS token is emitted, later positions hold ``pad_id``, and decode
+    stops once every row is done.  With ``mesh``, requests shard over the
+    data axis and the models' logical-axis annotations bind for the whole
+    prefill+decode scope.
 
     ``guarded=True`` routes through the robustness layer
     (:func:`repro.runtime.guard.guarded_generate`: store verification,
     per-role dense demotion, NaN/Inf retry, deadline) and appends the
     :class:`~repro.runtime.guard.HealthReport` to the return tuple;
     ``guard_kwargs`` (``verify=``, ``deadline_s=``, ``max_retries=``,
-    ``dense_model=``, ``pad_id=``) pass through."""
+    ``dense_model=``) pass through."""
     if guarded:
         from repro.runtime.guard import guarded_generate
+        if prompt_pad_id is not None:
+            raise NotImplementedError(
+                "guarded serving takes equal-length prompts; serve ragged "
+                "streams through repro.launch.mixer")
         toks, report = guarded_generate(model, params, prompts, gen, max_len,
-                                        mesh=mesh, **guard_kwargs)
+                                        mesh=mesh, eos_id=eos_id,
+                                        pad_id=pad_id, **guard_kwargs)
         return toks, report.t_prefill_s, report.t_decode_s, report
     if mesh is None:
-        return _generate(model, params, prompts, gen, max_len)
+        return _generate(model, params, prompts, gen, max_len,
+                         eos_id=eos_id, pad_id=pad_id,
+                         prompt_pad_id=prompt_pad_id)
     with mesh, logical_axis_rules(axis_map_for(mesh)):
         prompts = jax.device_put(prompts,
                                  named_sharding(mesh, "batch", None))
-        return _generate(model, params, prompts, gen, max_len)
+        return _generate(model, params, prompts, gen, max_len,
+                         eos_id=eos_id, pad_id=pad_id,
+                         prompt_pad_id=prompt_pad_id)
 
 
 def _fast_plan(cfg, tokens: int):
@@ -135,7 +232,22 @@ def main() -> None:
                          "report")
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request wall-clock budget in seconds "
-                         "(guarded mode)")
+                         "(guarded / mixer modes)")
+    ap.add_argument("--mixer", action="store_true",
+                    help="continuous batching: serve a mixed-length request "
+                         "stream through repro.launch.mixer instead of one "
+                         "static lockstep batch")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="decode slots for --mixer (default: --batch)")
+    ap.add_argument("--eos", type=int, default=None,
+                    help="EOS token id: rows/requests stop early once it is "
+                         "emitted (tail padded with pad_id)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for --mixer requests "
+                         "(0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k cutoff for sampled --mixer decoding "
+                         "(0 = full vocab)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -153,6 +265,41 @@ def main() -> None:
     ndev = int(np.prod(list(mesh_axis_sizes(mesh).values()))) if mesh else 1
 
     rng = np.random.default_rng(0)
+
+    if args.mixer:
+        from repro.launch.mixer import Mixer, Request
+        slots = args.slots or args.batch
+        max_len = args.prompt_len + args.gen
+        # mixed-length stream: prompt lengths cycle below --prompt-len so
+        # admissions land at distinct positions (the point of the mixer)
+        reqs = []
+        for i in range(args.batch):
+            plen = max(1, args.prompt_len - (i % 4) * (args.prompt_len // 5))
+            reqs.append(Request(
+                uid=f"req{i}",
+                prompt=jnp.asarray(
+                    rng.integers(0, cfg.vocab, (plen,)), jnp.int32),
+                max_new=args.gen, temperature=args.temperature,
+                top_k=args.top_k, seed=i))
+        mx = Mixer(model, params, slots=slots, max_len=max_len,
+                   eos_id=args.eos, deadline_s=args.deadline)
+        results = mx.run(reqs)
+        st = mx.stats()
+        print(f"[serve/mixer] {label}: slots={slots} devices={ndev} "
+              f"requests={len(reqs)}")
+        plens = {r.uid: len(r.prompt) for r in reqs}
+        for res in results:
+            print(f"  {res.uid}: prompt={plens[res.uid]} "
+                  f"tok={res.n_tokens}/{len(res.tokens)} slot={res.slot} "
+                  f"admit_step={res.admit_step} "
+                  f"eos={res.report.eos_hit} out={res.tokens[:6]}")
+        print(f"  decode  {st['tokens']} tok in {st['t_decode_s']:.2f}s "
+              f"over {st['steps']} steps "
+              f"({_rate(st['tokens'], st['t_decode_s']):.1f} tok/s, "
+              f"{_rate(st['tokens'], st['t_decode_s']) / ndev:.1f} "
+              f"tok/s/dev) slot_reuse_admits={st['slot_reuse_admits']}")
+        return
+
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
@@ -160,20 +307,21 @@ def main() -> None:
     if args.guarded:
         toks, t_prefill, t_gen, report = generate(
             model, params, prompts, args.gen, args.prompt_len + args.gen,
-            mesh=mesh, guarded=True, deadline_s=args.deadline)
+            mesh=mesh, guarded=True, deadline_s=args.deadline,
+            eos_id=args.eos)
     else:
         toks, t_prefill, t_gen = generate(
             model, params, prompts, args.gen, args.prompt_len + args.gen,
-            mesh=mesh)
+            mesh=mesh, eos_id=args.eos)
     n_pref = args.batch * args.prompt_len
     n_gen = args.batch * args.gen
     print(f"[serve] {label}: batch={args.batch} devices={ndev}")
     print(f"  prefill {n_pref} tok in {t_prefill:.2f}s "
-          f"({n_pref / t_prefill:.1f} tok/s, "
-          f"{n_pref / t_prefill / ndev:.1f} tok/s/dev)")
+          f"({_rate(n_pref, t_prefill):.1f} tok/s, "
+          f"{_rate(n_pref, t_prefill) / ndev:.1f} tok/s/dev)")
     print(f"  decode  {n_gen} tok in {t_gen:.2f}s "
-          f"({n_gen / t_gen:.1f} tok/s, "
-          f"{n_gen / t_gen / ndev:.1f} tok/s/dev)")
+          f"({_rate(n_gen, t_gen):.1f} tok/s, "
+          f"{_rate(n_gen, t_gen) / ndev:.1f} tok/s/dev)")
     print(f"  sample out: {np.asarray(toks[0, :8])}")
     if report is not None:
         print(f"  health: healthy={report.healthy} "

@@ -101,13 +101,23 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def _valid_mask(s: int, length: jax.Array) -> jax.Array:
+    """(1 | B, S) validity mask from a scalar or per-row (B,) ``length``.
+
+    Per-row lengths are the mixer's per-slot causal mask: every batch row
+    (= KV slot) attends to its OWN prefix only, so slots at different
+    positions — or stale KV left by an evicted request — never leak."""
+    return jnp.arange(s)[None, :] < jnp.reshape(length, (-1, 1))
+
+
 def decode_attention_gqa(q: jax.Array, k_cache: jax.Array,
                          v_cache: jax.Array, length: jax.Array) -> jax.Array:
     """Grouped-query decode attention WITHOUT materializing repeated KV.
 
-    q: (B, H, D); caches: (B, S, Hkv, D) with H = r·Hkv.  The cache is
-    consumed in its stored layout (S may be model-sharded: the only
-    cross-shard values are the (B, Hkv, r)-sized softmax stats and the
+    q: (B, H, D); caches: (B, S, Hkv, D) with H = r·Hkv.  ``length`` is the
+    number of valid cache positions — a scalar, or (B,) per-slot lengths.
+    The cache is consumed in its stored layout (S may be model-sharded: the
+    only cross-shard values are the (B, Hkv, r)-sized softmax stats and the
     (B, Hkv, r, D) output partials — never the cache itself)."""
     b, s, hk, d = k_cache.shape
     h = q.shape[1]
@@ -115,7 +125,7 @@ def decode_attention_gqa(q: jax.Array, k_cache: jax.Array,
     qg = q.reshape(b, hk, r, d)
     scale = 1.0 / math.sqrt(d)
     scores = jnp.einsum("bgrd,bsgd->bgrs", qg, k_cache) * scale
-    valid = (jnp.arange(s) < length)[None, None, None, :]
+    valid = _valid_mask(s, length)[:, None, None, :]
     scores = jnp.where(valid, scores, NEG_INF)
     w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bgrs,bsgd->bgrd", w.astype(COMPUTE_DTYPE), v_cache)
@@ -127,14 +137,15 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """One-token attention against a cache.
 
     q: (B, H, D); caches: (B, S, H, D); ``length``: number of valid cache
-    positions (scalar).  Cost is linear in S — this is the decode_32k /
-    long_500k step.
+    positions — a scalar, or (B,) per-slot lengths for mixed-position
+    batches.  Cost is linear in S — this is the decode_32k / long_500k
+    step.
     """
     b, s, h, d = k_cache.shape
     scale = 1.0 / math.sqrt(d)
-    valid = jnp.arange(s) < length                       # (S,)
+    valid = _valid_mask(s, length)                       # (1 | B, S)
     scores = jnp.einsum("bhd,bshd->bhs", q, k_cache) * scale
-    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bhs,bshd->bhd", w.astype(COMPUTE_DTYPE), v_cache)
     return out.astype(q.dtype)
@@ -194,23 +205,31 @@ def attention_decode_block(x: jax.Array, p: dict, cfg: ModelConfig,
     """Single-token attention step.
 
     x: (B, d).  Caches (B, S, Hkv, D) are updated at ``cache_pos`` (ring
-    position for sliding windows; == pos for full caches).  Returns
-    (out (B, d), new_k_cache, new_v_cache).
+    position for sliding windows; == pos for full caches).  ``pos`` /
+    ``cache_pos`` are scalars (lockstep batch) or (B,) per-slot vectors
+    (the mixer's mixed-position batch: every row rotates, writes, and
+    masks at its OWN position).  Returns (out (B, d), new_k_cache,
+    new_v_cache).
     """
     b, _ = x.shape
     nh, nk, hd = L.eff_heads(cfg.n_heads), cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.asarray(pos)
+    cache_pos = jnp.asarray(cache_pos)
     q = L.proj(x, p["wq"], "attn.wq")
     k = L.proj(x, p["wk"], "attn.wk")
     v = L.proj(x, p["wv"], "attn.wv")
-    pos1 = jnp.reshape(pos, (1,))
+    pos1 = jnp.reshape(pos, (b, 1)) if pos.ndim else jnp.reshape(pos, (1,))
     q = apply_rope(q.reshape(b, 1, nh, hd), pos1, freqs).reshape(b, nh, hd)
     k = apply_rope(k.reshape(b, 1, nk, hd), pos1, freqs).reshape(b, nk, hd)
     v = v.reshape(b, nk, hd)
-    if optflags.enabled("maskedkv"):
+    if optflags.enabled("maskedkv") or cache_pos.ndim:
         # one-hot masked blend: elementwise along the (possibly model-
         # sharded) S axis — no replicate-and-repartition, unlike a dynamic
-        # update at a traced index.  Costs one cache-sized RMW pass.
-        hot = (jnp.arange(k_cache.shape[1]) == cache_pos)[None, :, None, None]
+        # update at a traced index.  Costs one cache-sized RMW pass.  A
+        # per-slot (B,) cache_pos always takes this path (each row writes
+        # at its own position — dynamic_update_slice cannot).
+        hot = (jnp.arange(k_cache.shape[1])[None, :] ==
+               jnp.reshape(cache_pos, (-1, 1)))[:, :, None, None]
         k_cache = jnp.where(hot, k[:, None].astype(k_cache.dtype), k_cache)
         v_cache = jnp.where(hot, v[:, None].astype(v_cache.dtype), v_cache)
     else:

@@ -437,11 +437,21 @@ class Model:
     def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,
                     pos: jax.Array, extras: PyTree = None
                     ) -> tuple[jax.Array, PyTree]:
-        """One token for the whole batch.  tokens: (B,), pos: scalar.
-        Returns (logits (B, V), new cache).  ``extras``: optional
-        layer-stacked operand pytree riding the scan (see _run_uniform)."""
+        """One token for the whole batch.  tokens: (B,); pos: scalar for a
+        lockstep batch, or a (B,) per-slot position vector (continuous
+        batching: each batch row is an independent KV slot decoding at its
+        own position — RoPE, cache writes, and the causal mask all follow
+        the row's own position; see :mod:`repro.launch.mixer`).  Returns
+        (logits (B, V), new cache).  ``extras``: optional layer-stacked
+        operand pytree riding the scan (see _run_uniform)."""
         cfg = self.cfg
         _check_family(cfg)
+        pos = jnp.asarray(pos)
+        if pos.ndim not in (0, 1) or \
+                (pos.ndim == 1 and pos.shape[0] != tokens.shape[0]):
+            raise ValueError(
+                f"decode_step: pos must be a scalar or a per-slot vector "
+                f"matching the batch ({tokens.shape[0]},); got {pos.shape}")
         if extras is not None and not _uniform_stack(cfg):
             raise NotImplementedError(
                 "extras (layer-stacked operands) need a uniform layer stack")

@@ -71,7 +71,10 @@ class HealthReport:
     to ``"ok"`` or the :class:`IntegrityError` reason.
     ``switched_to_dense_at`` is the decode position where the request
     degraded to the dense model (``-1`` = during prefill, ``None`` =
-    never).  Timings are wall-clock seconds; everything else is
+    never).  Under mixed traffic (:mod:`repro.launch.mixer`) one report
+    is produced PER REQUEST: ``request_id`` names it and ``eos_hit``
+    records an EOS-terminated generation (``steps`` < ``gen`` with no
+    deadline).  Timings are wall-clock seconds; everything else is
     deterministic for a fixed seed — :meth:`stable_dict` drops the
     timings so two runs can be diffed exactly."""
 
@@ -81,8 +84,10 @@ class HealthReport:
     dense_steps: int = 0
     switched_to_dense_at: Optional[int] = None
     deadline_hit: bool = False
+    eos_hit: bool = False
     steps: int = 0
     gen: int = 0
+    request_id: Optional[str] = None
     t_prefill_s: float = 0.0
     t_decode_s: float = 0.0
     t_total_s: float = 0.0
@@ -154,6 +159,7 @@ def guarded_generate(model, params, prompts: jax.Array, gen: int,
                      dense_model=None, verify: bool = True,
                      deadline_s: Optional[float] = None,
                      max_retries: int = 1, pad_id: int = -1,
+                     eos_id: Optional[int] = None,
                      mesh=None) -> tuple[jax.Array, HealthReport]:
     """Greedy batched generation with the full robustness layer.
 
@@ -162,7 +168,9 @@ def guarded_generate(model, params, prompts: jax.Array, gen: int,
     compressed model's own inner dense model — correct because serving
     runs on the pruned tree).  Returns ``(tokens (B, gen) int32,
     HealthReport)``; positions not produced before ``deadline_s`` hold
-    ``pad_id``."""
+    ``pad_id``.  With ``eos_id``, a row's tokens after its EOS hold
+    ``pad_id`` and decode stops early once EVERY row has emitted EOS
+    (``report.eos_hit``) instead of burning the remaining steps."""
     from repro.exec.dispatch import CompressedModel
     from repro.launch.mesh import axis_map_for
     from repro.models.sharding import logical_axis_rules, named_sharding
@@ -199,11 +207,11 @@ def guarded_generate(model, params, prompts: jax.Array, gen: int,
                                      named_sharding(mesh, "batch", None))
             toks = _drive(cm, dense_model, params, prompts, gen, max_len,
                           report, deadline_s, max_retries, pad_id, t_start,
-                          compressed)
+                          compressed, eos_id)
     else:
         toks = _drive(cm, dense_model, params, prompts, gen, max_len,
                       report, deadline_s, max_retries, pad_id, t_start,
-                      compressed)
+                      compressed, eos_id)
     report.t_total_s = time.perf_counter() - t_start
     return toks, report
 
@@ -211,8 +219,10 @@ def guarded_generate(model, params, prompts: jax.Array, gen: int,
 def _drive(cm, dense, params, prompts, gen: int, max_len: int,
            report: HealthReport, deadline_s: Optional[float],
            max_retries: int, pad_id: int, t_start: float,
-           compressed: bool) -> jax.Array:
+           compressed: bool, eos_id: Optional[int] = None) -> jax.Array:
     import contextlib
+
+    import numpy as np
 
     from repro.exec.dispatch import kernel_guard
 
@@ -314,6 +324,7 @@ def _drive(cm, dense, params, prompts, gen: int, max_len: int,
         # ---- greedy decode ------------------------------------------------
         out = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        done = np.zeros(b, bool)          # rows that already emitted EOS
         t1 = time.perf_counter()
         for t in range(plen, plen + gen):
             if deadline_s is not None and \
@@ -323,7 +334,18 @@ def _drive(cm, dense, params, prompts, gen: int, max_len: int,
                     "*", "deadline_exceeded",
                     detail=f"{len(out)}/{gen} tokens within {deadline_s}s")
                 break
-            out.append(tok)
+            if eos_id is None:
+                out.append(tok)
+            else:
+                # the EOS token itself is emitted; everything AFTER a
+                # row's EOS holds pad_id (the deadline tail's semantics),
+                # and once every row is done the remaining steps are
+                # skipped entirely instead of decoded and discarded
+                out.append(jnp.where(jnp.asarray(done), pad_id, tok))
+                done |= np.asarray(tok) == eos_id
+                if done.all():
+                    report.eos_hit = True
+                    break
             logits, cache = guarded_step(t, cache, tok)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if out:

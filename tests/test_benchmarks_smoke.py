@@ -47,6 +47,9 @@ def test_run_quick_smoke(capsys, tmp_path):
     assert "serve_scan_vs_unrolled" in out
     assert "fallbacks=" in out
     assert "kcache=" in out
+    # continuous batching: mixed-length stream vs static lockstep chunks
+    assert "serve_mixer_vs_static" in out
+    assert "slot_reuse_admits=" in out
     # memory pipeline: pipelined-vs-naive kernel + serving rows, the
     # threaded per-op search comparison, and the per-level GLB fit
     assert "kernel_bitmap_spmm_pipeline" in out
@@ -66,7 +69,7 @@ def test_run_quick_smoke(capsys, tmp_path):
                      "dimo_batch_avg", "exec_ratio_block50",
                      "exec_ratio_nm24", "exec_calibration_block50",
                      "serve_prefill_comp_b1", "serve_decode_comp_b2",
-                     "serve_scan_vs_unrolled",
+                     "serve_scan_vs_unrolled", "serve_mixer_vs_static",
                      "memo_stats_fetch_table"):
         assert expected in names
     for row in doc["rows"]:
