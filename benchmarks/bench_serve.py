@@ -219,6 +219,31 @@ def run(quick: bool = False) -> None:
          f"fallbacks={report.fallback_counts() or 'none'} "
          f"tokens_match={bool(jnp.all(toks_u == toks_g))}")
 
+    # observability row: the SAME static generate with telemetry off vs
+    # with a tracer + metrics registry + kernel timer installed
+    # (repro.obs).  The off path must stay bit-identical — the span/event
+    # helpers reduce to one None check — and the on path's ratio is the
+    # plane's real cost; both sides are warm (the guarded row above
+    # already traced this shape)
+    from repro.obs import metrics as omet
+    from repro.obs import trace as otr
+    from repro.obs.profile import kernel_timer
+    toks_off, _, t_off = serve_mod.generate(cm, pruned, prompts, gen,
+                                            plen + gen)
+    tracer = otr.Tracer()
+    reg = omet.MetricsRegistry()
+    with otr.tracing(tracer), omet.collecting(reg), \
+            kernel_timer(registry=reg, tracer=tracer):
+        toks_on, _, t_on = serve_mod.generate(cm, pruned, prompts, gen,
+                                              plen + gen)
+    snap = reg.snapshot()
+    emit("serve_telemetry_overhead", t_on / gen * 1e6,
+         f"off_us={t_off / gen * 1e6:.0f} "
+         f"overhead={t_on / max(t_off, 1e-9):.2f}x "
+         f"trace_events={len(tracer.events)} "
+         f"counter_series={len(snap['counters'])} "
+         f"tokens_match={bool(jnp.all(toks_off == toks_on))}")
+
     # continuous-batching row: a mixed-length request stream through the
     # mixer vs the SAME requests served as static lockstep chunks.
     # Budgets alternate short/long so lockstep burns steps past the short

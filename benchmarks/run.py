@@ -105,6 +105,21 @@ def main(argv=None) -> int:
                 traceback.print_exc()
             suite_s[name] = time.perf_counter() - t0
             print(f"# suite {name} done in {suite_s[name]:.1f}s", flush=True)
+        # whole-run cache telemetry (repro.obs sources): the memo and
+        # kernel-cache counters accumulated ACROSS the suites that ran —
+        # the `_run` suffix keeps these distinct from per-suite
+        # `memo_stats_*` rows some suites emit themselves
+        from repro.core import memo
+        from repro.kernels import ops as kops
+        for cname, st in sorted(memo.stats().items()):
+            if st.lookups:
+                common.emit(f"memo_stats_run_{cname}", 0.0,
+                            f"hits={st.hits} misses={st.misses} "
+                            f"hit_rate={st.hit_rate:.3f}")
+        kc = kops.kernel_cache_stats()
+        common.emit("kernel_cache_run", 0.0,
+                    f"hits={kc['hits']} misses={kc['misses']} "
+                    f"entries={kc['entries']}")
     finally:
         if json_path is not None:
             common.set_collector(None)

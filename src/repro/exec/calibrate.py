@@ -44,6 +44,7 @@ from repro.core.arch import HardwareConfig
 from repro.core.cosearch import CoSearchConfig
 from repro.exec.dispatch import OpCounters
 from repro.exec.plans import ExecPlan, build_exec_plan
+from repro.obs import trace as otr
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,24 +196,31 @@ def calibrate(cfg: ModelConfig, plan: ExecPlan,
     :func:`repro.exec.dispatch.instrument` run of its compressed model.
     The re-search reuses the plan's own workload knobs (tokens,
     activation density, value width)."""
-    rows = compare(plan, counters)
-    if not rows:
-        raise ValueError("no measured counters overlap the plan's roles")
-    scale = fit_scale(rows)
-    glb_scale = fit_glb_scale(rows)
-    # plan.hardware() already carries the plan's own scales, so repeated
-    # calibration rounds compose multiplicatively at both levels
-    arch_cal = calibrated_hardware(plan.hardware(), scale,
-                                   glb_scale=glb_scale)
-    plan_cal = build_exec_plan(cfg, plan.sparsity, tokens=plan.tokens,
-                               act_density=plan.act_density,
-                               hardware=arch_cal, search_cfg=search_cfg,
-                               value_bits=plan.value_bits)
-    # keep the BASE arch name (resolvable through arch_by_name after a
-    # JSON round trip) + the composed scales on the plan itself
-    plan_cal = dataclasses.replace(
-        plan_cal, arch=plan.arch, energy_scale=plan.energy_scale * scale,
-        glb_energy_scale=plan.glb_energy_scale * glb_scale)
+    with otr.span("calibrate", arch=plan.arch, roles=len(plan.ops)):
+        with otr.span("calibrate.compare"):
+            rows = compare(plan, counters)
+        if not rows:
+            raise ValueError("no measured counters overlap the plan's roles")
+        with otr.span("calibrate.fit", rows=len(rows)):
+            scale = fit_scale(rows)
+            glb_scale = fit_glb_scale(rows)
+        otr.event("calibrate.fitted", scale=round(scale, 6),
+                  glb_scale=round(glb_scale, 6))
+        # plan.hardware() already carries the plan's own scales, so repeated
+        # calibration rounds compose multiplicatively at both levels
+        arch_cal = calibrated_hardware(plan.hardware(), scale,
+                                       glb_scale=glb_scale)
+        with otr.span("calibrate.research"):
+            plan_cal = build_exec_plan(cfg, plan.sparsity, tokens=plan.tokens,
+                                       act_density=plan.act_density,
+                                       hardware=arch_cal,
+                                       search_cfg=search_cfg,
+                                       value_bits=plan.value_bits)
+        # keep the BASE arch name (resolvable through arch_by_name after a
+        # JSON round trip) + the composed scales on the plan itself
+        plan_cal = dataclasses.replace(
+            plan_cal, arch=plan.arch, energy_scale=plan.energy_scale * scale,
+            glb_energy_scale=plan.glb_energy_scale * glb_scale)
     changed = {}
     for op in plan.ops:
         after = plan_cal.for_role(op.role)

@@ -56,6 +56,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as omet
+from repro.obs import trace as otr
+from repro.runtime.fault import StragglerMonitor
 from repro.runtime.guard import HealthReport
 
 
@@ -167,11 +170,27 @@ class Mixer:
     CompressedModel.  ``eos_id`` ends a request when sampled; ``pad_id``
     fills result tails; ``deadline_s`` (optional) evicts requests that
     exceed their wall-clock budget, tail padded — same semantics as the
-    guarded static driver."""
+    guarded static driver.
+
+    Telemetry (zero-cost when off): with an ambient tracer
+    (:func:`repro.obs.trace.tracing`) every request emits admit / prefill
+    / slot-write spans, per-token decode events, and an evict event, all
+    linked by the ``trace_id`` its :class:`HealthReport` carries; with an
+    ambient registry (:func:`repro.obs.metrics.collecting`) the stream's
+    admission/eviction/token counters, per-step decode latency histogram
+    and slot-occupancy gauge record live, and each finished request's
+    report is folded in (so ``serve_tokens_generated_total`` equals the
+    reports' summed ``steps``).  ``straggler`` (default: a fresh
+    :class:`~repro.runtime.fault.StragglerMonitor`) watches every decode
+    step's wall time; spikes land in the metrics snapshot
+    (``mixer_straggler_spikes_total``) and the trace (as unstable
+    events — excluded from ``stable_trace`` since they are timing-derived,
+    not stream-determined)."""
 
     def __init__(self, model, params, *, slots: int, max_len: int,
                  eos_id: Optional[int] = None, pad_id: int = -1,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 straggler: Optional[StragglerMonitor] = None):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
         if getattr(model.cfg, "family", None) == "encdec":
@@ -185,6 +204,8 @@ class Mixer:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.deadline_s = deadline_s
+        self.straggler = straggler if straggler is not None \
+            else StragglerMonitor()
 
         self.cache = model.init_cache(slots, max_len)
         for leaf in jax.tree.leaves(self.cache):
@@ -236,15 +257,24 @@ class Mixer:
                 r is not None and r.uid == req.uid for r in self._req):
             raise ValueError(f"duplicate request uid {req.uid!r}")
 
+        tid = otr.trace_id(req.uid)
         t0 = time.perf_counter()
-        last, rcache = prefill_request(
-            self.model, self.params, prompt, self.max_len,
-            prefill_fn=self._prefill_fn, step_fn=self._ingest_fn)
-        self.cache = self._write_fn(self.cache, rcache,
-                                    jnp.asarray(slot, jnp.int32))
-        report = HealthReport(gen=req.max_new, request_id=str(req.uid))
+        with otr.span("admit", trace_id=tid, request_id=req.uid, slot=slot,
+                      prompt_len=plen, step=self.step_count):
+            with otr.span("prefill", trace_id=tid, request_id=req.uid):
+                last, rcache = prefill_request(
+                    self.model, self.params, prompt, self.max_len,
+                    prefill_fn=self._prefill_fn, step_fn=self._ingest_fn)
+            with otr.span("slot_write", trace_id=tid, request_id=req.uid,
+                          slot=slot):
+                self.cache = self._write_fn(self.cache, rcache,
+                                            jnp.asarray(slot, jnp.int32))
+        report = HealthReport(gen=req.max_new, request_id=str(req.uid),
+                              trace_id=tid)
         report.t_prefill_s = time.perf_counter() - t0
         self.t_admit += report.t_prefill_s
+        omet.counter_inc("mixer_admissions_total")
+        omet.counter_inc("mixer_tokens_admitted_total", plen)
 
         self.active[slot] = True
         self._req[slot] = req
@@ -255,6 +285,7 @@ class Mixer:
         self._reports[slot] = report
         self.events.append({"event": "admit", "uid": req.uid, "slot": slot,
                             "step": self.step_count, "prompt_len": plen})
+        omet.gauge_set("mixer_slot_occupancy", int(self.active.sum()))
         # the first token comes straight from prefill logits
         self._emit(slot, sample_token(last, req, 0))
         return slot
@@ -264,11 +295,23 @@ class Mixer:
         """One decode token for every occupied slot (free slots ride along
         at position 0; their output is discarded)."""
         t0 = time.perf_counter()
-        toks = jnp.asarray(self.pending, jnp.int32)
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._step_fn(self.params, self.cache, toks, pos)
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))   # one host sync
+        with otr.span("decode_step", step=self.step_count,
+                      occupied=int(self.active.sum())):
+            toks = jnp.asarray(self.pending, jnp.int32)
+            pos = jnp.asarray(self.pos, jnp.int32)
+            logits, self.cache = self._step_fn(self.params, self.cache,
+                                               toks, pos)
+            greedy = np.asarray(jnp.argmax(logits, axis=-1))  # one host sync
         self.step_count += 1
+        dt = time.perf_counter() - t0
+        omet.counter_inc("mixer_decode_steps_total")
+        omet.observe("mixer_decode_step_seconds", dt)
+        if self.straggler.observe(self.step_count, dt):
+            # timing-derived, hence stable=False: two runs of the same
+            # stream may legitimately spike at different steps
+            otr.event("straggler_spike", stable=False,
+                      step=self.step_count, dt_s=dt)
+            omet.counter_inc("mixer_straggler_spikes_total")
         now = time.perf_counter()
         for slot in np.nonzero(self.active)[0]:
             slot = int(slot)
@@ -296,6 +339,8 @@ class Mixer:
         req = self._req[slot]
         self._emitted[slot].append(tok)
         self.tokens_out += 1
+        otr.event("token", trace_id=self._reports[slot].trace_id,
+                  request_id=req.uid, index=len(self._emitted[slot]) - 1)
         if self.eos_id is not None and tok == self.eos_id:
             self._reports[slot].eos_hit = True
             self._evict(slot, "eos")
@@ -321,11 +366,18 @@ class Mixer:
         self.events.append({"event": "evict", "uid": req.uid, "slot": slot,
                             "step": self.step_count, "reason": reason,
                             "tokens": len(emitted)})
+        otr.event("evict", trace_id=rep.trace_id, request_id=req.uid,
+                  slot=slot, reason=reason, tokens=len(emitted))
+        omet.counter_inc("mixer_evictions_total", reason=reason)
+        reg = omet.current_metrics()
+        if reg is not None:
+            omet.ingest_health(reg, rep)
         self.active[slot] = False
         self._req[slot] = None
         self._reports[slot] = None
         self.pending[slot] = 0
         self.pos[slot] = 0
+        omet.gauge_set("mixer_slot_occupancy", int(self.active.sum()))
 
     # -- scheduler loop ------------------------------------------------------
     def run(self, requests: Sequence[Request]) -> list[RequestResult]:
@@ -352,4 +404,6 @@ class Mixer:
         return {"steps": self.step_count, "tokens": self.tokens_out,
                 "admits": admits, "evictions": evicts,
                 "slot_reuse_admits": reused,
-                "t_admit_s": self.t_admit, "t_decode_s": self.t_decode}
+                "t_admit_s": self.t_admit, "t_decode_s": self.t_decode,
+                "straggler_spikes": len(self.straggler.flagged),
+                "step_ewma_s": self.straggler.ewma}

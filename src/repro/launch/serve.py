@@ -25,6 +25,7 @@ CPU quickstart (reduced config):
 from __future__ import annotations
 
 import argparse
+import contextlib
 import functools
 import time
 from typing import Optional
@@ -37,6 +38,8 @@ from repro.configs import get_config
 from repro.launch.mesh import axis_map_for, make_serve_mesh, mesh_axis_sizes
 from repro.models.sharding import logical_axis_rules, named_sharding
 from repro.models.transformer import Model
+from repro.obs import metrics as omet
+from repro.obs import trace as otr
 
 
 def _rate(n: float, t: float) -> float:
@@ -81,63 +84,73 @@ def _generate(model, params, prompts: jax.Array, gen: int, max_len: int,
                          f"max_len ({max_len})")
     offsets = _prompt_offsets(prompts, prompt_pad_id)
     step = jax.jit(model.decode_step, donate_argnums=(1,))
+    tid = otr.trace_id()
 
     t0 = time.perf_counter()
-    if offsets.any():
-        # ragged left-padded rows: admit each row alone at its REAL length
-        # (batch-1 prefill or exact token ingest) into its slot of the
-        # shared cache, then decode with a per-row position vector — the
-        # continuous-batching admission primitive (launch.mixer)
-        from repro.launch import mixer as mixer_mod
-        cache = model.init_cache(b, max_len)
-        write = jax.jit(mixer_mod.write_slot, donate_argnums=(0,))
-        lasts = []
-        for r in range(b):
-            last, rcache = mixer_mod.prefill_request(
-                model, params, prompts[r:r + 1, int(offsets[r]):], max_len)
-            cache = write(cache, rcache, jnp.asarray(r, jnp.int32))
-            lasts.append(last)
-        logits = jnp.stack(lasts)
-        pos = jnp.asarray(plen - offsets, jnp.int32)       # per-row (B,)
-        jax.block_until_ready(logits)
-    else:
-        pos = None                                         # lockstep scalar
-        try:
-            prefill = jax.jit(functools.partial(model.prefill,
-                                                max_len=max_len))
-            all_logits, cache = prefill(params, prompts)
-            logits = all_logits[:, -1]
-            jax.block_until_ready(logits)
-        except NotImplementedError:
-            # ring windows / hybrid / ssm / encdec: exact decode-path ingest
+    with otr.span("prefill", trace_id=tid, batch=b, plen=plen,
+                  ragged=bool(offsets.any())):
+        if offsets.any():
+            # ragged left-padded rows: admit each row alone at its REAL
+            # length (batch-1 prefill or exact token ingest) into its slot
+            # of the shared cache, then decode with a per-row position
+            # vector — the continuous-batching admission primitive
+            # (launch.mixer)
+            from repro.launch import mixer as mixer_mod
             cache = model.init_cache(b, max_len)
-            logits = None
-            for t in range(plen):
-                logits, cache = step(params, cache, prompts[:, t],
-                                     jnp.asarray(t, jnp.int32))
+            write = jax.jit(mixer_mod.write_slot, donate_argnums=(0,))
+            lasts = []
+            for r in range(b):
+                with otr.span("admit", trace_id=tid, row=r,
+                              prompt_len=plen - int(offsets[r])):
+                    last, rcache = mixer_mod.prefill_request(
+                        model, params, prompts[r:r + 1, int(offsets[r]):],
+                        max_len)
+                    cache = write(cache, rcache, jnp.asarray(r, jnp.int32))
+                lasts.append(last)
+            logits = jnp.stack(lasts)
+            pos = jnp.asarray(plen - offsets, jnp.int32)   # per-row (B,)
             jax.block_until_ready(logits)
+        else:
+            pos = None                                     # lockstep scalar
+            try:
+                prefill = jax.jit(functools.partial(model.prefill,
+                                                    max_len=max_len))
+                all_logits, cache = prefill(params, prompts)
+                logits = all_logits[:, -1]
+                jax.block_until_ready(logits)
+            except NotImplementedError:
+                # ring windows / hybrid / ssm / encdec: exact decode-path
+                # ingest
+                cache = model.init_cache(b, max_len)
+                logits = None
+                for t in range(plen):
+                    logits, cache = step(params, cache, prompts[:, t],
+                                         jnp.asarray(t, jnp.int32))
+                jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
     out = []
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     done = np.zeros(b, bool)              # rows that already emitted EOS
     t1 = time.perf_counter()
-    for i, t in enumerate(range(plen, plen + gen)):
-        if eos_id is None:
-            out.append(tok)
-        else:
-            # a row's EOS token is emitted; everything after it holds
-            # pad_id, and once EVERY row is done the remaining steps are
-            # skipped instead of decoded and thrown away
-            out.append(jnp.where(jnp.asarray(done), pad_id, tok))
-            done |= np.asarray(tok) == eos_id
-            if done.all():
-                break
-        cur = jnp.asarray(t, jnp.int32) if pos is None else pos + i
-        logits, cache = step(params, cache, tok, cur)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    jax.block_until_ready(out[-1] if out else logits)
+    with otr.span("decode", trace_id=tid, batch=b, gen=gen):
+        for i, t in enumerate(range(plen, plen + gen)):
+            if eos_id is None:
+                out.append(tok)
+            else:
+                # a row's EOS token is emitted; everything after it holds
+                # pad_id, and once EVERY row is done the remaining steps
+                # are skipped instead of decoded and thrown away
+                out.append(jnp.where(jnp.asarray(done), pad_id, tok))
+                done |= np.asarray(tok) == eos_id
+                if done.all():
+                    break
+            cur = jnp.asarray(t, jnp.int32) if pos is None else pos + i
+            logits, cache = step(params, cache, tok, cur)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(out[-1] if out else logits)
     t_gen = time.perf_counter() - t1
+    omet.counter_inc("serve_static_tokens_total", b * len(out))
     if len(out) < gen:
         pad = jnp.full((b,), pad_id, jnp.int32)
         out.extend([pad] * (gen - len(out)))
@@ -248,6 +261,14 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k cutoff for sampled --mixer decoding "
                          "(0 = full vocab)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="capture a span trace of the run and write Chrome "
+                         "trace-event JSON (load in chrome://tracing) plus "
+                         "PATH.stable.json, the deterministic projection")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="collect serving metrics and write a JSON snapshot "
+                         "to PATH plus Prometheus text exposition to "
+                         "PATH.prom")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -256,6 +277,7 @@ def main() -> None:
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     label = cfg.name
+    ratio = None
     if args.compressed:
         model, params = compressed_model(cfg, params)
         ratio = model.store.achieved_ratio()
@@ -263,6 +285,47 @@ def main() -> None:
         label += f" [compressed: ratio={ratio:.3f} fallbacks={fb or 'none'}]"
     mesh = make_serve_mesh(args.batch) if args.mesh else None
     ndev = int(np.prod(list(mesh_axis_sizes(mesh).values()))) if mesh else 1
+
+    # telemetry (--trace / --metrics): contexts wrap the serving run only —
+    # model build and planning stay outside so the exports tell the
+    # REQUESTS' story
+    tel = contextlib.ExitStack()
+    tracer = None
+    registry = None
+    exec_counters = None
+    if args.trace is not None:
+        tracer = otr.Tracer()
+        tel.enter_context(otr.tracing(tracer))
+    if args.metrics is not None:
+        registry = omet.MetricsRegistry()
+        tel.enter_context(omet.collecting(registry))
+    if tracer is not None or registry is not None:
+        from repro.obs.profile import kernel_timer
+        tel.enter_context(kernel_timer(registry=registry, tracer=tracer))
+        if args.compressed:
+            from repro.exec import dispatch as exec_dispatch
+            exec_counters = tel.enter_context(exec_dispatch.instrument())
+
+    def _telemetry_done(mx=None) -> None:
+        """Close the capture contexts, fold the passive sources in, export."""
+        tel.close()
+        if registry is not None:
+            if exec_counters is not None:
+                omet.ingest_instrument(registry, exec_counters)
+            omet.collect_caches(registry)
+            if mx is not None:
+                omet.ingest_straggler(registry, mx.straggler)
+            if ratio is not None:
+                registry.gauge_set("serve_achieved_compression_ratio", ratio)
+            registry.save(args.metrics)
+            with open(args.metrics + ".prom", "w") as fh:
+                fh.write(registry.prometheus_text())
+            print(f"  metrics: {args.metrics} (+ {args.metrics}.prom)")
+        if tracer is not None:
+            tracer.save_chrome(args.trace)
+            tracer.save_stable(args.trace + ".stable.json")
+            print(f"  trace: {args.trace} ({len(tracer.events)} events; "
+                  f"stable projection at {args.trace}.stable.json)")
 
     rng = np.random.default_rng(0)
 
@@ -298,6 +361,7 @@ def main() -> None:
               f"({_rate(st['tokens'], st['t_decode_s']):.1f} tok/s, "
               f"{_rate(st['tokens'], st['t_decode_s']) / ndev:.1f} "
               f"tok/s/dev) slot_reuse_admits={st['slot_reuse_admits']}")
+        _telemetry_done(mx)
         return
 
     prompts = jnp.asarray(
@@ -330,6 +394,7 @@ def main() -> None:
               f"retries={report.retries} dense_steps={report.dense_steps} "
               f"deadline_hit={report.deadline_hit} "
               f"steps={report.steps}/{report.gen}")
+    _telemetry_done()
 
 
 if __name__ == "__main__":

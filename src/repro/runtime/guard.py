@@ -47,6 +47,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime import fault, integrity
 
 
@@ -74,9 +76,13 @@ class HealthReport:
     never).  Under mixed traffic (:mod:`repro.launch.mixer`) one report
     is produced PER REQUEST: ``request_id`` names it and ``eos_hit``
     records an EOS-terminated generation (``steps`` < ``gen`` with no
-    deadline).  Timings are wall-clock seconds; everything else is
-    deterministic for a fixed seed — :meth:`stable_dict` drops the
-    timings so two runs can be diffed exactly."""
+    deadline).  ``trace_id`` links the report to its spans in the active
+    :class:`repro.obs.trace.Tracer` (None when tracing was off — the id
+    is deterministic, derived from the request id or a tracer counter).
+    Timings are wall-clock seconds; everything else is deterministic for
+    a fixed seed — :meth:`stable_dict` drops the timings so two runs can
+    be diffed exactly, and :meth:`timings_dict` is the complementary
+    projection (``stable_dict() | timings_dict() == to_dict()``)."""
 
     verify: dict = dataclasses.field(default_factory=dict)
     fallbacks: list = dataclasses.field(default_factory=list)
@@ -88,6 +94,7 @@ class HealthReport:
     steps: int = 0
     gen: int = 0
     request_id: Optional[str] = None
+    trace_id: Optional[str] = None
     t_prefill_s: float = 0.0
     t_decode_s: float = 0.0
     t_total_s: float = 0.0
@@ -126,12 +133,20 @@ class HealthReport:
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    _TIMING_KEYS = ("t_prefill_s", "t_decode_s", "t_total_s")
+
     def stable_dict(self) -> dict:
         """The deterministic projection: everything except wall-clock."""
         out = self.to_dict()
-        for k in ("t_prefill_s", "t_decode_s", "t_total_s"):
+        for k in self._TIMING_KEYS:
             del out[k]
         return out
+
+    def timings_dict(self) -> dict:
+        """The wall-clock half :meth:`stable_dict` drops, structured:
+        ``stable_dict() | timings_dict()`` reconstructs :meth:`to_dict`
+        exactly (round-trip pinned in ``tests/test_obs.py``)."""
+        return {k: getattr(self, k) for k in self._TIMING_KEYS}
 
     def to_json(self, indent: Optional[int] = 1) -> str:
         return json.dumps(self.to_dict(), indent=indent)
@@ -176,7 +191,8 @@ def guarded_generate(model, params, prompts: jax.Array, gen: int,
     from repro.models.sharding import logical_axis_rules, named_sharding
 
     t_start = time.perf_counter()
-    report = HealthReport(gen=gen)
+    tid = obs_trace.trace_id()
+    report = HealthReport(gen=gen, trace_id=tid)
     if max_len is None:
         max_len = prompts.shape[1] + gen
 
@@ -184,35 +200,45 @@ def guarded_generate(model, params, prompts: jax.Array, gen: int,
     compressed = isinstance(model, CompressedModel)
     if compressed and dense_model is None:
         dense_model = model.model
-    if compressed and verify:
-        statuses: dict[str, str] = {}
-        errors: dict[str, integrity.IntegrityError] = {}
-        for source in (cm.store, cm.stacked):
-            for role, err in integrity.role_errors(source):
-                statuses.setdefault(role, "ok")
-                if err is not None and statuses[role] == "ok":
-                    statuses[role] = err.reason
-                    errors[role] = err
-        report.verify = statuses
-        if errors:
-            for role in sorted(errors):
-                err = errors[role]
-                report.record_fallback(role, "integrity_violation",
-                                       detail=err.reason, layer=err.layer)
-            cm = cm.demoted(errors)
+    with obs_trace.span("guarded_request", trace_id=tid,
+                        batch=int(prompts.shape[0]), gen=gen,
+                        compressed=compressed):
+        if compressed and verify:
+            statuses: dict[str, str] = {}
+            errors: dict[str, integrity.IntegrityError] = {}
+            with obs_trace.span("verify", trace_id=tid):
+                for source in (cm.store, cm.stacked):
+                    for role, err in integrity.role_errors(source):
+                        statuses.setdefault(role, "ok")
+                        if err is not None and statuses[role] == "ok":
+                            statuses[role] = err.reason
+                            errors[role] = err
+            report.verify = statuses
+            if errors:
+                for role in sorted(errors):
+                    err = errors[role]
+                    report.record_fallback(role, "integrity_violation",
+                                           detail=err.reason, layer=err.layer)
+                    obs_trace.event("demote", trace_id=tid, role=role,
+                                    code="integrity_violation",
+                                    reason=err.reason)
+                cm = cm.demoted(errors)
 
-    if mesh is not None:
-        with mesh, logical_axis_rules(axis_map_for(mesh)):
-            prompts = jax.device_put(prompts,
-                                     named_sharding(mesh, "batch", None))
+        if mesh is not None:
+            with mesh, logical_axis_rules(axis_map_for(mesh)):
+                prompts = jax.device_put(prompts,
+                                         named_sharding(mesh, "batch", None))
+                toks = _drive(cm, dense_model, params, prompts, gen, max_len,
+                              report, deadline_s, max_retries, pad_id,
+                              t_start, compressed, eos_id)
+        else:
             toks = _drive(cm, dense_model, params, prompts, gen, max_len,
                           report, deadline_s, max_retries, pad_id, t_start,
                           compressed, eos_id)
-    else:
-        toks = _drive(cm, dense_model, params, prompts, gen, max_len,
-                      report, deadline_s, max_retries, pad_id, t_start,
-                      compressed, eos_id)
     report.t_total_s = time.perf_counter() - t_start
+    reg = obs_metrics.current_metrics()
+    if reg is not None:
+        obs_metrics.ingest_health(reg, report)
     return toks, report
 
 
@@ -227,6 +253,7 @@ def _drive(cm, dense, params, prompts, gen: int, max_len: int,
     from repro.exec.dispatch import kernel_guard
 
     b, plen = prompts.shape
+    tid = report.trace_id
     demoted_roles: set[str] = set()
 
     def sink(role: str, exc: Exception) -> None:
@@ -235,6 +262,8 @@ def _drive(cm, dense, params, prompts, gen: int, max_len: int,
         if role not in demoted_roles:
             demoted_roles.add(role)
             report.record_fallback(role, "kernel_failure", detail=repr(exc))
+            obs_trace.event("demote", trace_id=tid, role=role,
+                            code="kernel_failure")
 
     # the pre-step cache must survive a retry AND the dense fallback's
     # re-step, so — unlike the unguarded driver — no donate_argnums here
@@ -254,10 +283,18 @@ def _drive(cm, dense, params, prompts, gen: int, max_len: int,
             raise NonFiniteError(f"non-finite logits at position {pos}")
         return lg, nc
 
+    def _note_retries(g, n0: int, pos: int) -> None:
+        for ev in g.events[n0:]:
+            if ev.action == "retry":
+                obs_trace.event("retry", trace_id=tid, pos=pos,
+                                code=_failure_code(ev.error))
+
     def guarded_step(pos: int, cache, tok):
         nonlocal use_dense
         if not use_dense:
+            n0 = len(guard.events)
             res = guard.run(pos, lambda: attempt(step_c, cache, tok, pos))
+            _note_retries(guard, n0, pos)
             if res is not None:
                 return res
             last = guard.events[-1].error
@@ -268,7 +305,11 @@ def _drive(cm, dense, params, prompts, gen: int, max_len: int,
             use_dense = True
             report.switched_to_dense_at = pos
             report.record_fallback("*", _failure_code(last), detail=last)
+            obs_trace.event("dense_switch", trace_id=tid, pos=pos,
+                            code=_failure_code(last))
+        n1 = len(dense_guard.events)
         res = dense_guard.run(pos, lambda: attempt(step_d, cache, tok, pos))
+        _note_retries(dense_guard, n1, pos)
         if res is None:
             raise RuntimeError(
                 f"dense fallback failed at position {pos}: "
@@ -279,78 +320,90 @@ def _drive(cm, dense, params, prompts, gen: int, max_len: int,
     guard_ctx = kernel_guard(sink) if compressed else contextlib.nullcontext()
     with guard_ctx:
         # ---- prefill (guarded; falls back to guarded token ingest) --------
-        t0 = time.perf_counter()
-        prefill_c = jax.jit(functools.partial(cm.prefill, max_len=max_len))
+        with obs_trace.span("prefill", trace_id=tid, batch=b, plen=plen):
+            t0 = time.perf_counter()
+            prefill_c = jax.jit(functools.partial(cm.prefill,
+                                                  max_len=max_len))
 
-        def attempt_prefill():
+            def attempt_prefill():
+                try:
+                    all_lg, c = prefill_c(params, prompts)
+                except NotImplementedError as e:
+                    raise _NoPrefill() from e
+                lg = all_lg[:, -1]
+                if not _finite(lg):
+                    raise NonFiniteError("non-finite prefill logits")
+                return lg, c
+
             try:
-                all_lg, c = prefill_c(params, prompts)
-            except NotImplementedError as e:
-                raise _NoPrefill() from e
-            lg = all_lg[:, -1]
-            if not _finite(lg):
-                raise NonFiniteError("non-finite prefill logits")
-            return lg, c
-
-        try:
-            res = guard.run(-1, attempt_prefill)
-            if res is None:
-                last = guard.events[-1].error
-                if step_d is None:
-                    raise RuntimeError(
-                        f"guarded prefill failed with no dense fallback "
-                        f"available: {last}")
-                use_dense = True
-                report.switched_to_dense_at = -1
-                report.record_fallback("*", _failure_code(last), detail=last)
-                prefill_d = jax.jit(functools.partial(dense.prefill,
-                                                      max_len=max_len))
-                all_lg, cache = prefill_d(params, prompts)
-                logits = all_lg[:, -1]
-                if not _finite(logits):
-                    raise NonFiniteError("dense prefill logits non-finite")
-            else:
-                logits, cache = res
-        except _NoPrefill:
-            # ring windows / hybrid / ssm / encdec: exact decode-path
-            # ingest, every step under the same guard
-            cache = cm.init_cache(b, max_len)
-            logits = None
-            for t in range(plen):
-                logits, cache = guarded_step(t, cache, prompts[:, t])
-        jax.block_until_ready(logits)
-        report.t_prefill_s = time.perf_counter() - t0
+                n0 = len(guard.events)
+                res = guard.run(-1, attempt_prefill)
+                _note_retries(guard, n0, -1)
+                if res is None:
+                    last = guard.events[-1].error
+                    if step_d is None:
+                        raise RuntimeError(
+                            f"guarded prefill failed with no dense fallback "
+                            f"available: {last}")
+                    use_dense = True
+                    report.switched_to_dense_at = -1
+                    report.record_fallback("*", _failure_code(last),
+                                           detail=last)
+                    obs_trace.event("dense_switch", trace_id=tid, pos=-1,
+                                    code=_failure_code(last))
+                    prefill_d = jax.jit(functools.partial(dense.prefill,
+                                                          max_len=max_len))
+                    all_lg, cache = prefill_d(params, prompts)
+                    logits = all_lg[:, -1]
+                    if not _finite(logits):
+                        raise NonFiniteError(
+                            "dense prefill logits non-finite")
+                else:
+                    logits, cache = res
+            except _NoPrefill:
+                # ring windows / hybrid / ssm / encdec: exact decode-path
+                # ingest, every step under the same guard
+                cache = cm.init_cache(b, max_len)
+                logits = None
+                for t in range(plen):
+                    logits, cache = guarded_step(t, cache, prompts[:, t])
+            jax.block_until_ready(logits)
+            report.t_prefill_s = time.perf_counter() - t0
 
         # ---- greedy decode ------------------------------------------------
-        out = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        done = np.zeros(b, bool)          # rows that already emitted EOS
-        t1 = time.perf_counter()
-        for t in range(plen, plen + gen):
-            if deadline_s is not None and \
-                    time.perf_counter() - t_start > deadline_s:
-                report.deadline_hit = True
-                report.record_fallback(
-                    "*", "deadline_exceeded",
-                    detail=f"{len(out)}/{gen} tokens within {deadline_s}s")
-                break
-            if eos_id is None:
-                out.append(tok)
-            else:
-                # the EOS token itself is emitted; everything AFTER a
-                # row's EOS holds pad_id (the deadline tail's semantics),
-                # and once every row is done the remaining steps are
-                # skipped entirely instead of decoded and discarded
-                out.append(jnp.where(jnp.asarray(done), pad_id, tok))
-                done |= np.asarray(tok) == eos_id
-                if done.all():
-                    report.eos_hit = True
-                    break
-            logits, cache = guarded_step(t, cache, tok)
+        with obs_trace.span("decode", trace_id=tid, batch=b, gen=gen):
+            out = []
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if out:
-            jax.block_until_ready(out[-1])
-        report.t_decode_s = time.perf_counter() - t1
+            done = np.zeros(b, bool)      # rows that already emitted EOS
+            t1 = time.perf_counter()
+            for t in range(plen, plen + gen):
+                if deadline_s is not None and \
+                        time.perf_counter() - t_start > deadline_s:
+                    report.deadline_hit = True
+                    report.record_fallback(
+                        "*", "deadline_exceeded",
+                        detail=f"{len(out)}/{gen} tokens within "
+                               f"{deadline_s}s")
+                    obs_trace.event("deadline", trace_id=tid, pos=t)
+                    break
+                if eos_id is None:
+                    out.append(tok)
+                else:
+                    # the EOS token itself is emitted; everything AFTER a
+                    # row's EOS holds pad_id (the deadline tail's
+                    # semantics), and once every row is done the remaining
+                    # steps are skipped entirely instead of decoded and
+                    # discarded
+                    out.append(jnp.where(jnp.asarray(done), pad_id, tok))
+                    done |= np.asarray(tok) == eos_id
+                    if done.all():
+                        report.eos_hit = True
+                        break
+                logits, cache = guarded_step(t, cache, tok)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if out:
+                jax.block_until_ready(out[-1])
+            report.t_decode_s = time.perf_counter() - t1
 
     report.steps = len(out)
     report.retries = sum(1 for e in guard.events if e.action == "retry") + \
